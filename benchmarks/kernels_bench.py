@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute through the interpreter
+(numerics only, not speed), so wall numbers here time the *jnp reference*
+path — the structural costs (FLOPs, bytes) per call are derived
+analytically and printed alongside.  On TPU the same entry points compile
+to Mosaic; the derived column is what the roofline predicts per call.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn, *args, repeat=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    n = 1024
+    adj = np.where(rng.random((n, n)) < 0.01, 1.0, 1e9).astype(np.float32)
+    dist = np.full(n, 1e9, np.float32)
+    dist[0] = 0
+    f = jax.jit(lambda a, d: ref.minplus_spmv_ref(a, d, 1e9))
+    us = _time(f, jnp.array(adj), jnp.array(dist))
+    rows.append(("kernels/minplus_spmv_n1024", us,
+                 f"bytes={(n*n+2*n)*4};tpu_mem_term_us="
+                 f"{(n*n+2*n)*4/819e9*1e6:.2f}"))
+
+    q = 128
+    adjm = (rng.random((n, n)) < 0.01).astype(np.float32)
+    cnts = rng.random((n, q)).astype(np.float32)
+    f2 = jax.jit(ref.counting_spmm_ref)
+    us = _time(f2, jnp.array(adjm), jnp.array(cnts))
+    flops = 2 * n * n * q
+    rows.append(("kernels/counting_spmm_n1024_q128", us,
+                 f"flops={flops};tpu_compute_term_us={flops/197e12*1e6:.3f}"))
+
+    B, L, H, D = 1, 1024, 8, 64
+    qq = jnp.array(rng.standard_normal((B, L, H, D)), jnp.float32)
+    kk = jnp.array(rng.standard_normal((B, L, H, D)), jnp.float32)
+    vv = jnp.array(rng.standard_normal((B, L, H, D)), jnp.float32)
+    f3 = jax.jit(lambda a, b, c: ref.mha_ref(a, b, c, causal=True))
+    us = _time(f3, qq, kk, vv)
+    flops = 4 * B * H * L * L * D
+    rows.append(("kernels/attention_L1024", us,
+                 f"flops={flops};tpu_compute_term_us={flops/197e12*1e6:.3f}"))
+
+    S = 8192
+    q1 = jnp.array(rng.standard_normal((4, H, D)), jnp.float32)
+    kc = jnp.array(rng.standard_normal((4, S, 2, D)), jnp.float32)
+    vc = jnp.array(rng.standard_normal((4, S, 2, D)), jnp.float32)
+    lens = jnp.array([S, S, S // 2, 7], jnp.int32)
+    f4 = jax.jit(ref.decode_attention_ref)
+    us = _time(f4, q1, kc, vc, lens)
+    bytes_ = 4 * S * 2 * D * 2 * 4
+    rows.append(("kernels/decode_attn_S8192", us,
+                 f"bytes={bytes_};tpu_mem_term_us={bytes_/819e9*1e6:.3f}"))
+    return rows

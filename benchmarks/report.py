@@ -1,0 +1,57 @@
+"""Render §Dry-run and §Roofline markdown tables from the sweep records.
+
+  PYTHONPATH=src python -m benchmarks.report > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import sys
+
+from .roofline import load_records, roofline_terms
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/1e9:.2f}"
+
+
+def main() -> None:
+    recs = [r for r in load_records() if "arch" in r]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("### §Dry-run — 80 cells (10 archs × 4 shapes × {single 256, "
+          "multi 512} chips)\n")
+    print("| arch | shape | mesh | status | compile s | HBM GB/dev | "
+          "flops/dev | wire GB/dev | kv shard |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"skipped | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"**{r.get('status')}** | — | — | — | — | — |")
+            continue
+        m = r["memory"]["peak_estimate_bytes"] / 1e9
+        fl = r["cost"]["flops_per_device"]
+        w = r["collectives_per_device_bytes"].get("wire_bytes", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{r.get('compile_seconds', 0):.0f}+"
+              f"{r.get('analysis_compile_seconds', 0):.0f} | {m:.1f} | "
+              f"{fl:.2e} | {w:.1f} | {r.get('kv_shard','-')} |")
+
+    print("\n### §Roofline — three terms per cell (single-pod table)\n")
+    print("| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck | "
+          "MODEL_FLOPs/HLO | MFU-UB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != "single" or r.get("status") != "ok":
+            continue
+        rt = roofline_terms(r)
+        print(f"| {rt['arch']} | {rt['shape']} | {rt['t_compute_s']:.2e} | "
+              f"{rt['t_memory_s']:.2e} | {rt['t_collective_s']:.2e} | "
+              f"**{rt['bottleneck']}** | {rt['useful_ratio']:.2f} | "
+              f"{rt['mfu_upper_bound']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

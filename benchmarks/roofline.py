@@ -1,0 +1,111 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run JSON records (experiments/dryrun/*.json).
+
+  compute term    = HLO_FLOPs  / (chips × peak)   = flops_per_device / peak
+  memory term     = HLO_bytes  / (chips × HBM bw) = bytes_per_device / bw
+  collective term = wire bytes per device / ICI bw (ring model; the raw
+                    operand-sum convention from the assignment is also
+                    recorded as `coll_s_operand`)
+
+MODEL_FLOPS uses the kind-appropriate analytic count:
+  train:   6 · N_active · tokens      (fwd 2 + bwd 4)
+  prefill: 2 · N_active · tokens
+  decode:  2 · N_active · batch  (+ attention cache term, reported via
+           HLO ratio — dominated by the cache-bound memory term anyway)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HARDWARE
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec.get("active_params_B", 0.0) * 1e9
+    shape = rec["shape"]
+    toks = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+            "decode_32k": 128, "long_500k": 1}[shape]
+    mult = 6.0 if shape == "train_4k" else 2.0
+    return mult * n_active * toks
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    peak = HARDWARE["peak_flops_bf16"]
+    hbm = HARDWARE["hbm_bandwidth"]
+    ici = HARDWARE["ici_bandwidth"]
+    fl = rec["cost"]["flops_per_device"]
+    by = rec["cost"]["bytes_accessed_per_device"]
+    coll = rec["collectives_per_device_bytes"]
+    t_comp = fl / peak
+    t_mem = by / hbm
+    t_coll = coll.get("wire_bytes", 0.0) / ici
+    dom = max((t_comp, "compute"), (t_mem, "memory"),
+              (t_coll, "collective"))[1]
+    mf = model_flops(rec)
+    hlo_total = fl * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "coll_s_operand": coll.get("total_operand", 0.0) / (ici),
+        "bottleneck": dom,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "roofline_bound_s": max(t_comp, t_mem, t_coll),
+        "compute_fraction": t_comp / max(t_comp, t_mem, t_coll, 1e-30),
+        "hbm_gb_per_device": rec["memory"]["peak_estimate_bytes"] / 1e9,
+        "mfu_upper_bound": mf / (max(t_comp, t_mem, t_coll, 1e-30)
+                                 * chips * peak),
+    }
+
+
+def load_records(dirpath: str = "experiments/dryrun",
+                 variant: str = "baseline") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if variant is not None and r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(dirpath: str = "experiments/dryrun",
+        csv_out: str = "experiments/roofline.csv") -> List[Tuple[str, float, str]]:
+    rows = []
+    table = []
+    for rec in load_records(dirpath):
+        if "arch" not in rec:
+            continue
+        rt = roofline_terms(rec)
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rt is None:
+            status = rec.get("status")
+            if status == "skipped":
+                rows.append((f"roofline/{cell}", 0.0,
+                             rec.get("reason", "skipped")))
+            continue
+        table.append(rt)
+        rows.append((
+            f"roofline/{cell}", rt["roofline_bound_s"],
+            f"bound={rt['bottleneck']};comp={rt['t_compute_s']:.3e}s;"
+            f"mem={rt['t_memory_s']:.3e}s;coll={rt['t_collective_s']:.3e}s;"
+            f"useful={rt['useful_ratio']:.2f};"
+            f"mfu_ub={rt['mfu_upper_bound']:.3f};"
+            f"hbm={rt['hbm_gb_per_device']:.1f}GB"))
+    if csv_out and table:
+        os.makedirs(os.path.dirname(csv_out), exist_ok=True)
+        keys = list(table[0].keys())
+        with open(csv_out, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for rt in table:
+                f.write(",".join(str(rt[k]) for k in keys) + "\n")
+    return rows

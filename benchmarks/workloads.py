@@ -1,0 +1,45 @@
+"""Benchmark workloads.
+
+The paper's 15 real graphs aren't redistributable inside this container, so
+each benchmark runs on seeded synthetic stand-ins chosen to span the same
+regimes (Table 2: social/web hubs, dense biological graphs, sparse
+citation): power-law hub graphs (ep/sl-like), uniform sparse (up/gg-like),
+dense small (ye-like), layered DAGs (walk==path regime of Example 5.2).
+Query generation follows §7.1: s, t sampled from the top-10%-degree set
+(V'), distance(s, t) ≤ 3 so results exist, k = 6 default.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import erdos_renyi, layered_dag, power_law
+from repro.core.graph import Graph
+from repro.core.oracle import bfs_dist_np
+
+GRAPHS = {
+    # name: (builder, kwargs) — sizes keep CPU wall time sane
+    "pl_hub": lambda: power_law(3000, 8.0, seed=1),      # ep/sl-like
+    "uniform": lambda: erdos_renyi(4000, 4.0, seed=2),   # gg/up-like
+    "dense": lambda: erdos_renyi(600, 40.0, seed=3),     # ye-like
+    "dag": lambda: layered_dag(5, 40, 10.0, seed=4),     # Example 5.2 G0
+}
+
+
+def high_degree_queries(g: Graph, count: int, seed: int = 0,
+                        max_dist: int = 3):
+    """§7.1 query sets: endpoints from V' (top 10% by degree), dist ≤ 3."""
+    deg = np.diff(g.indptr)
+    cutoff = np.quantile(deg, 0.9)
+    vprime = np.nonzero(deg >= max(cutoff, 1))[0]
+    rng = np.random.default_rng(seed)
+    out = []
+    tries = 0
+    while len(out) < count and tries < count * 200:
+        tries += 1
+        s, t = rng.choice(vprime, size=2)
+        if s == t:
+            continue
+        d = bfs_dist_np(g, int(s), max_dist, excluded=int(t))
+        if d[int(t)] <= max_dist:
+            out.append((int(s), int(t)))
+    return out

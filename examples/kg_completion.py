@@ -1,0 +1,29 @@
+"""Motivation example 3: paths as training signal for KG completion.
+
+PathEnum enumerates hop-constrained paths between entity pairs; the data
+pipeline tokenizes them; a small LM trains on the path corpus.
+
+    PYTHONPATH=src python examples/kg_completion.py
+"""
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core import power_law
+from repro.data.pipeline import PathCorpus
+from repro.optim import adamw
+from repro.training.trainer import Trainer, TrainerConfig
+
+graph = power_law(500, 5.0, seed=11)
+data = PathCorpus(graph=graph, k=4, seq_len=32, global_batch=8)
+
+cfg = ArchConfig(name="kg_lm", family="dense", num_layers=2, d_model=128,
+                 num_heads=4, kv_heads=2, d_ff=256, vocab=data.vocab,
+                 head_dim=32, attn_chunk=32, tie_embeddings=True)
+opt = adamw.OptimizerConfig(peak_lr=1e-3, warmup_steps=5, total_steps=30)
+trainer = Trainer(cfg, opt, TrainerConfig(steps=30, log_every=5))
+trainer.fit(data)
+first, last = trainer.metrics_log[0], trainer.metrics_log[-1]
+print(f"path-LM loss: step {first['step']}: {first['loss']:.3f} -> "
+      f"step {last['step']}: {last['loss']:.3f}")
+assert last["loss"] < first["loss"], "training on path corpus must learn"
+print("OK")

@@ -1,0 +1,9 @@
+"""Batched serving example (continuous batching over decode slots).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess, sys, os
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "llama3p2_1b", "--requests", "6",
+                "--slots", "3", "--max-tokens", "8"],
+               check=True, env={"PYTHONPATH": "src", **os.environ})

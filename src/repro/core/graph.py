@@ -1,0 +1,175 @@
+"""Graph container + generators for the PathEnum engine.
+
+The engine's canonical representation is a static CSR pair (forward and
+reverse) plus flat edge lists.  Vertices are int32 ids in [0, n).  All arrays
+are host numpy; ``DeviceGraph`` mirrors them as jnp arrays for the jitted /
+distributed paths.  Distances are bounded by the hop constraint ``k`` so the
+sentinel ``INF_DIST`` is any value > k; we use 0x3FFF_FFFF to stay addition-
+safe in int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+INF_DIST = np.int32(0x3FFFFFFF)
+PAD = np.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed graph in CSR (forward + reverse) with flat edge lists."""
+
+    n: int
+    # forward CSR
+    indptr: np.ndarray    # (n+1,) int64
+    indices: np.ndarray   # (m,)   int32, dst sorted within each src slice
+    # reverse CSR
+    rindptr: np.ndarray   # (n+1,) int64
+    rindices: np.ndarray  # (m,)   int32
+    # flat edge list (same order as forward CSR)
+    esrc: np.ndarray      # (m,) int32
+    edst: np.ndarray      # (m,) int32
+
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0])
+
+    def out_degree(self, v: int) -> int:
+        return int(self.indptr[v + 1] - self.indptr[v])
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        return self.rindices[self.rindptr[v]:self.rindptr[v + 1]]
+
+    def reverse(self) -> "Graph":
+        return Graph(self.n, self.rindptr, self.rindices, self.indptr,
+                     self.indices, self.rindices_src(), self.redst())
+
+    def rindices_src(self) -> np.ndarray:
+        return np.repeat(np.arange(self.n, dtype=np.int32),
+                         np.diff(self.rindptr).astype(np.int64))
+
+    def redst(self) -> np.ndarray:
+        return self.rindices
+
+
+def from_edges(n: int, edges: np.ndarray, dedup: bool = True) -> Graph:
+    """Build a Graph from an (m, 2) int array of directed edges.
+
+    Self-loops are dropped (a simple path never uses one); duplicate edges are
+    deduplicated by default (the edge relation of the join model is a set).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.size:
+        keep = edges[:, 0] != edges[:, 1]
+        edges = edges[keep]
+    if dedup and edges.size:
+        edges = np.unique(edges, axis=0)
+    src = edges[:, 0] if edges.size else np.zeros(0, np.int64)
+    dst = edges[:, 1] if edges.size else np.zeros(0, np.int64)
+
+    def csr(a, b):
+        order = np.lexsort((b, a))
+        a_s, b_s = a[order], b[order]
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(indptr, a_s + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return indptr, b_s.astype(np.int32), a_s.astype(np.int32)
+
+    indptr, indices, esrc = csr(src, dst)
+    rindptr, rindices, _ = csr(dst, src)
+    return Graph(n=n, indptr=indptr, indices=indices, rindptr=rindptr,
+                 rindices=rindices, esrc=esrc, edst=indices)
+
+
+# ---------------------------------------------------------------------------
+# Generators (benchmark + test workloads; real datasets are not bundled)
+# ---------------------------------------------------------------------------
+
+def erdos_renyi(n: int, avg_deg: float, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    return from_edges(n, np.stack([src, dst], axis=1))
+
+
+def power_law(n: int, avg_deg: float, alpha: float = 1.2, seed: int = 0) -> Graph:
+    """Directed preferential-attachment-ish graph (heavy-tailed out/in degree).
+
+    Mirrors the paper's social/web workloads where high-degree hubs create
+    large search spaces (the `s,t in V'` query sets of Section 7.1).
+    """
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg)
+    # Zipfian endpoint sampling
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    probs = ranks ** (-alpha)
+    probs /= probs.sum()
+    perm_out = rng.permutation(n)
+    perm_in = rng.permutation(n)
+    src = perm_out[rng.choice(n, size=m, p=probs)]
+    dst = perm_in[rng.choice(n, size=m, p=probs)]
+    return from_edges(n, np.stack([src, dst], axis=1))
+
+
+def layered_dag(layers: int, width: int, fanout: float, seed: int = 0) -> Graph:
+    """Layered DAG with dense inter-layer wiring: many s-t paths, no cycles.
+
+    This is the walk==path regime of Example 5.2 (G0): every walk the engine
+    generates is a valid path, so invalid-partial counts are ~0.
+    """
+    rng = np.random.default_rng(seed)
+    n = layers * width + 2
+    s, t = n - 2, n - 1
+    edges = []
+    first = np.arange(width)
+    for v in first:
+        edges.append((s, v))
+    for l in range(layers - 1):
+        base_a, base_b = l * width, (l + 1) * width
+        cnt = int(width * fanout)
+        a = rng.integers(0, width, size=cnt) + base_a
+        b = rng.integers(0, width, size=cnt) + base_b
+        edges.extend(zip(a.tolist(), b.tolist()))
+    for v in range((layers - 1) * width, layers * width):
+        edges.append((v, t))
+    return from_edges(n, np.array(edges, dtype=np.int64))
+
+
+def grid(rows: int, cols: int, bidirectional: bool = True) -> Graph:
+    n = rows * cols
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                edges.append((v, v + 1))
+                if bidirectional:
+                    edges.append((v + 1, v))
+            if r + 1 < rows:
+                edges.append((v, v + cols))
+                if bidirectional:
+                    edges.append((v + cols, v))
+    return from_edges(n, np.array(edges, dtype=np.int64))
+
+
+def complete(n: int) -> Graph:
+    src, dst = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    return from_edges(n, np.stack([src.ravel(), dst.ravel()], axis=1))
+
+
+def random_graph_suite(seed: int = 0) -> dict:
+    """Small named workload suite used by tests and benchmarks."""
+    return {
+        "er_small": erdos_renyi(64, 3.0, seed),
+        "er_dense": erdos_renyi(48, 6.0, seed + 1),
+        "pl_hub": power_law(96, 4.0, seed=seed + 2),
+        "dag": layered_dag(4, 8, 3.0, seed + 3),
+        "grid": grid(6, 6),
+    }

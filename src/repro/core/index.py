@@ -1,0 +1,235 @@
+"""The light-weight query-dependent index (Section 4.2 / Algorithm 3).
+
+Semantics preserved exactly:
+  * ``dist_s[v] = S(s, v | G - {t})`` and ``dist_t[v] = S(v, t | G - {s})``
+    (two bounded BFS passes, bfs.py).
+  * level sets ``C_i = {v : dist_s[v] <= i  and  dist_t[v] <= k - i}``.
+  * ``I_t(v, b)``: out-neighbors v' of v with ``dist_t[v'] <= b`` in O(1) —
+    edges are kept only when ``dist_s[u] + 1 + dist_t[v] <= k`` (the paper's
+    hash-table H membership rule), sorted by ``(u, dist_t[v])`` and addressed
+    through a dense ``(n, k+1)`` end-offset matrix.
+  * ``I_s(v, b)``: symmetric reverse index sorted by ``(v, dist_s[u])`` —
+    used by the backward DP of Algorithm 5.
+
+TPU adaptation (recorded in DESIGN.md §2): the paper's hash table + counting
+sort become one lexsort + scatter-add histogram + cumulative sum; lookups
+stay O(1) via the offset matrix.  ``build_index`` is the host (numpy) build;
+``build_index_jax`` is the jit-compatible build with identical outputs
+(tests/test_index.py asserts bit-equality), enabling on-device index
+construction when queries are sharded across a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bfs
+from .graph import Graph
+
+
+@dataclasses.dataclass
+class LightweightIndex:
+    n: int
+    k: int
+    s: int
+    t: int
+    dist_s: np.ndarray        # (n,) int32, sentinel k+1
+    dist_t: np.ndarray        # (n,) int32, sentinel k+1
+    # forward: edges (u -> v) sorted by (u, dist_t[v]); only index edges kept
+    fwd_dst: np.ndarray       # (mf,) int32
+    fwd_eid: np.ndarray       # (mf,) int64 — original edge id (constraints ext.)
+    fwd_begin: np.ndarray     # (n,) int64
+    fwd_end: np.ndarray       # (n, k+1) int64 — end offset for budget b
+    # reverse: edges (u -> v) sorted by (v, dist_s[u])
+    rev_src: np.ndarray       # (mf,) int32
+    rev_begin: np.ndarray     # (n,) int64
+    rev_end: np.ndarray       # (n, k+1) int64 — end offset for budget b
+    level_count: np.ndarray   # (k+1,) int64 — |C_i|
+    gamma: np.ndarray         # (k,) float64 — gamma_hat_j (Eq. 5 statistic)
+
+    # -- O(1) lookups (host convenience; jitted code uses the arrays directly)
+    def it(self, v: int, b: int) -> np.ndarray:
+        """I_t(v, b): neighbors v' of v with dist_t[v'] <= b."""
+        if b < 0:
+            return self.fwd_dst[0:0]
+        b = min(b, self.k)
+        return self.fwd_dst[self.fwd_begin[v]:self.fwd_end[v, b]]
+
+    def is_(self, v: int, b: int) -> np.ndarray:
+        """I_s(v, b): in-neighbors v' of v with dist_s[v'] <= b."""
+        if b < 0:
+            return self.rev_src[0:0]
+        b = min(b, self.k)
+        return self.rev_src[self.rev_begin[v]:self.rev_end[v, b]]
+
+    def level(self, i: int) -> np.ndarray:
+        """I(i) = C_i as a vertex-id array."""
+        mask = (self.dist_s <= i) & (self.dist_t <= self.k - i)
+        return np.nonzero(mask)[0].astype(np.int32)
+
+    def it_count(self, v, b) -> np.ndarray:
+        """|I_t(v, b)| vectorized over v (b scalar)."""
+        if b < 0:
+            return np.zeros(np.shape(v), dtype=np.int64)
+        b = min(b, self.k)
+        return self.fwd_end[v, b] - self.fwd_begin[v]
+
+    @property
+    def num_index_edges(self) -> int:
+        return int(self.fwd_dst.shape[0])
+
+    def memory_bytes(self) -> int:
+        tot = 0
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                tot += v.nbytes
+        return tot
+
+
+def _offsets_from_sorted(keys_primary: np.ndarray, keys_secondary: np.ndarray,
+                         n: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """begin (n,), end (n, k+1) over arrays already sorted by (primary, sec)."""
+    cnt2d = np.zeros((n, k + 2), dtype=np.int64)
+    if keys_primary.size:
+        np.add.at(cnt2d, (keys_primary, np.minimum(keys_secondary, k + 1)), 1)
+    per_v = cnt2d.sum(axis=1)
+    begin = np.zeros(n, dtype=np.int64)
+    np.cumsum(per_v[:-1], out=begin[1:])
+    end = begin[:, None] + np.cumsum(cnt2d[:, : k + 1], axis=1)
+    return begin, end
+
+
+def build_index(graph: Graph, s: int, t: int, k: int,
+                dist_fn=bfs.index_distances_np,
+                edge_mask: Optional[np.ndarray] = None) -> LightweightIndex:
+    """Algorithm 3, host build.
+
+    ``edge_mask`` implements the Appendix-E predicate extension: edges whose
+    mask entry is False are filtered before the distance BFS, so constrained
+    queries reuse the whole machinery unchanged.
+    """
+    g = graph
+    if edge_mask is not None:
+        keep = np.asarray(edge_mask, dtype=bool)
+        edges = np.stack([g.esrc[keep], g.edst[keep]], axis=1)
+        from .graph import from_edges
+        g = from_edges(g.n, edges, dedup=False)
+    dist_s, dist_t = dist_fn(g, s, t, k)
+    dist_s = np.asarray(dist_s, dtype=np.int32)
+    dist_t = np.asarray(dist_t, dtype=np.int32)
+
+    u, v = g.esrc.astype(np.int64), g.edst.astype(np.int64)
+    # distance rule (Prop 4.3) + relation-construction rules of §3.1:
+    # no edge re-enters s (middle relations live in G-{s}, R_k demands v≠s)
+    # and no edge leaves t (only the virtual (t,t) padding, handled by the
+    # join enumerator explicitly).
+    keep = ((dist_s[u] + 1 + dist_t[v]) <= k) & (v != s) & (u != t)
+    keep_ids = np.nonzero(keep)[0]
+    fu, fv = u[keep], v[keep]
+
+    # forward: sort by (u, dist_t[v])
+    order_f = np.lexsort((dist_t[fv], fu))
+    fu_s, fv_s = fu[order_f], fv[order_f]
+    fwd_eid = keep_ids[order_f]
+    fwd_begin, fwd_end = _offsets_from_sorted(fu_s, dist_t[fv_s], g.n, k)
+
+    # reverse: sort by (v, dist_s[u])
+    order_r = np.lexsort((dist_s[fu], fv))
+    ru_s, rv_s = fu[order_r], fv[order_r]
+    rev_begin, rev_end = _offsets_from_sorted(rv_s, dist_s[ru_s], g.n, k)
+
+    ii = np.arange(k + 1)
+    lvl = (dist_s[None, :] <= ii[:, None]) & (dist_t[None, :] <= (k - ii)[:, None])
+    level_count = lvl.sum(axis=1).astype(np.int64)
+
+    gamma = np.zeros(k, dtype=np.float64)
+    for j in range(k):
+        cj = np.nonzero(lvl[j])[0]
+        if cj.size:
+            b = k - j - 1
+            cnts = fwd_end[cj, b] - fwd_begin[cj]
+            gamma[j] = float(cnts.mean())
+
+    return LightweightIndex(
+        n=g.n, k=k, s=s, t=t, dist_s=dist_s, dist_t=dist_t,
+        fwd_dst=fv_s.astype(np.int32), fwd_eid=fwd_eid,
+        fwd_begin=fwd_begin, fwd_end=fwd_end,
+        rev_src=ru_s.astype(np.int32), rev_begin=rev_begin, rev_end=rev_end,
+        level_count=level_count, gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# jit-compatible build (identical outputs, static shapes)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "k"))
+def _build_index_jax(esrc, edst, n: int, k: int, s, t):
+    INF = jnp.int32(k + 1)
+    dist_s = bfs.bfs_edge_relax(esrc, edst, n, k, s, t)
+    dist_t = bfs.bfs_edge_relax(edst, esrc, n, k, t, s)
+
+    u = esrc.astype(jnp.int32)
+    v = edst.astype(jnp.int32)
+    keep = ((dist_s[u] + 1 + dist_t[v]) <= k) & (v != s) & (u != t)
+    # invalid edges sort to the end: primary key n, secondary k+1
+    pf = jnp.where(keep, u, n)
+    sf = jnp.where(keep, dist_t[v], k + 1)
+    order_f = jnp.lexsort((sf, pf))
+    fv_s = jnp.where(keep[order_f], v[order_f], -1)
+    fu_s = pf[order_f]
+    feid = jnp.where(keep[order_f], order_f, -1)
+
+    def offsets(primary, secondary):
+        cnt2d = jnp.zeros((n + 1, k + 2), dtype=jnp.int32)
+        sec = jnp.minimum(secondary, k + 1)
+        cnt2d = cnt2d.at[primary, sec].add(1)
+        cnt2d = cnt2d[:n]
+        per_v = cnt2d.sum(axis=1)
+        begin = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(per_v)[:-1]])
+        end = begin[:, None] + jnp.cumsum(cnt2d[:, : k + 1], axis=1)
+        return begin, end
+
+    fwd_begin, fwd_end = offsets(fu_s, jnp.where(fv_s >= 0, dist_t[fv_s], k + 1))
+
+    pr = jnp.where(keep, v, n)
+    sr = jnp.where(keep, dist_s[u], k + 1)
+    order_r = jnp.lexsort((sr, pr))
+    ru_s = jnp.where(keep[order_r], u[order_r], -1)
+    rv_s = pr[order_r]
+    rev_begin, rev_end = offsets(rv_s, jnp.where(ru_s >= 0, dist_s[ru_s], k + 1))
+
+    ii = jnp.arange(k + 1)
+    lvl = (dist_s[None, :] <= ii[:, None]) & (dist_t[None, :] <= (k - ii)[:, None])
+    level_count = lvl.sum(axis=1)
+
+    jj = jnp.arange(k)
+    budgets = k - jj - 1  # (k,)
+    cnt_all = fwd_end[:, :] - fwd_begin[:, None]          # (n, k+1)
+    sel = cnt_all[:, budgets].T.astype(jnp.float32)       # (k, n)
+    gsum = jnp.where(lvl[:k], sel, 0.0).sum(axis=1)
+    gamma = gsum / jnp.maximum(level_count[:k].astype(jnp.float32), 1.0)
+
+    return (dist_s, dist_t, fv_s, feid, fwd_begin, fwd_end, ru_s, rev_begin,
+            rev_end, level_count, gamma)
+
+
+def build_index_jax(graph: Graph, s: int, t: int, k: int) -> LightweightIndex:
+    out = _build_index_jax(jnp.asarray(graph.esrc), jnp.asarray(graph.edst),
+                           graph.n, k, jnp.int32(s), jnp.int32(t))
+    (dist_s, dist_t, fv_s, feid, fwd_begin, fwd_end, ru_s, rev_begin, rev_end,
+     level_count, gamma) = map(np.asarray, out)
+    mf = int((fv_s >= 0).sum())
+    return LightweightIndex(
+        n=graph.n, k=k, s=s, t=t,
+        dist_s=dist_s.astype(np.int32), dist_t=dist_t.astype(np.int32),
+        fwd_dst=fv_s[:mf].astype(np.int32), fwd_eid=feid[:mf].astype(np.int64),
+        fwd_begin=fwd_begin.astype(np.int64), fwd_end=fwd_end.astype(np.int64),
+        rev_src=ru_s[:mf].astype(np.int32),
+        rev_begin=rev_begin.astype(np.int64), rev_end=rev_end.astype(np.int64),
+        level_count=level_count.astype(np.int64), gamma=gamma.astype(np.float64))

@@ -1,0 +1,166 @@
+"""IDX-JOIN (Algorithm 6): bushy plan — evaluate Q[0:i*] and Q[i*:k] by
+frontier DFS, then join on the cut vertex.
+
+TPU adaptation (DESIGN.md §2): the paper's hash join becomes a sort-merge
+join — both relations are sorted by the cut key (numpy lexsort here; bitonic
+sort network on device), matched by segment, and the cross products emitted
+per key group.  The `(t,t)` virtual self-loop of the relation construction
+(§3.1 rule 3) appears explicitly: a partial that reaches t before its target
+width is padded with t, so sub-queries cover all path lengths ≤ k in one
+evaluation — exactly the trick that lets the paper avoid k separate joins.
+
+The within-half simple-path check runs during expansion; the cross-half
+check runs at join time (the paper: "we check whether a result is a valid
+path when performing the join operation").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .enumerate import EngineLimit, EnumResult, EnumStats, _finalize
+from .graph import PAD
+from .index import LightweightIndex
+
+
+@dataclasses.dataclass
+class JoinStats(EnumStats):
+    ra_size: int = 0
+    rb_size: int = 0
+    pairs: int = 0
+
+
+def _expand_to_width(idx: LightweightIndex, start_vertices: np.ndarray,
+                     start_pos: int, width: int, stats: EnumStats,
+                     max_partials: Optional[int]) -> np.ndarray:
+    """All walk tuples of `width` vertices starting at position `start_pos`
+    from the given start vertices, with t-padding (Alg. 6 Search procedure).
+
+    Budget at depth L(M): I_t(v, k - start_pos - L(M) - 1) per Alg. 6 L12.
+    Within-half dup-check applied (padding-t exempt).
+    """
+    k, t = idx.k, idx.t
+    rows = np.full((start_vertices.shape[0], width), PAD, dtype=np.int32)
+    rows[:, 0] = start_vertices
+    for d in range(width - 1):
+        last = rows[:, d].astype(np.int64)
+        finished = rows[:, d] == t
+        # finished rows pad with t; unfinished expand via the index
+        b = k - start_pos - d - 1
+        begin = idx.fwd_begin[last]
+        end = idx.fwd_end[last, b] if b >= 0 else begin
+        cnt = np.where(finished, 1, (end - begin)).astype(np.int64)
+        stats.edges_accessed += int(cnt[~finished].sum())
+        total = int(cnt.sum())
+        if total == 0:
+            return rows[:0, :]
+        if max_partials is not None and total > max_partials:
+            raise EngineLimit(f"join half exceeded {max_partials} partials")
+        parent = np.repeat(np.arange(rows.shape[0], dtype=np.int64), cnt)
+        offs = np.zeros(rows.shape[0], dtype=np.int64)
+        np.cumsum(cnt[:-1], out=offs[1:])
+        rank = np.arange(total, dtype=np.int64) - offs[parent]
+        vnew = np.where(
+            finished[parent], t,
+            idx.fwd_dst[np.minimum(begin[parent] + rank,
+                                   idx.fwd_dst.shape[0] - 1)]
+            if idx.fwd_dst.size else t).astype(np.int32)
+        new_rows = rows[parent].copy()
+        new_rows[:, d + 1] = vnew
+        # within-half simple-path check (t-padding exempt)
+        dup = ((new_rows[:, : d + 1] == vnew[:, None]).any(axis=1)
+               & (vnew != t))
+        stats.partials_generated += total
+        stats.invalid_partials += int(dup.sum())
+        rows = new_rows[~dup]
+        if rows.shape[0] == 0:
+            return rows
+    return rows
+
+
+def enumerate_paths_join(
+    idx: LightweightIndex,
+    cut: int,
+    count_only: bool = False,
+    max_partials: Optional[int] = None,
+    max_results: Optional[int] = None,
+    constraint=None,
+) -> EnumResult:
+    """Algorithm 6 with cut position ``cut`` (i*)."""
+    k, s, t = idx.k, idx.s, idx.t
+    if not 0 < cut < k:
+        raise ValueError(f"cut must be in (0, k), got {cut}")
+    stats = JoinStats()
+
+    # R_a = Q[0:cut]: tuples of cut+1 vertices starting at s (position 0)
+    ra = _expand_to_width(idx, np.array([s], np.int32), 0, cut + 1, stats,
+                          max_partials)
+    stats.ra_size = ra.shape[0]
+    if ra.shape[0] == 0:
+        return _finalize(idx, [], [], 0, stats, exhausted=True)
+
+    # C = join keys realized in R_a (Alg. 6 L3)
+    keys = np.unique(ra[:, cut])
+    # R_b = Q[cut:k]: tuples of k-cut+1 vertices starting at position cut
+    rb = _expand_to_width(idx, keys.astype(np.int32), cut, k - cut + 1, stats,
+                          max_partials)
+    stats.rb_size = rb.shape[0]
+    if rb.shape[0] == 0:
+        return _finalize(idx, [], [], 0, stats, exhausted=True)
+
+    # ---- sort-merge join on the cut vertex ----
+    order_a = np.argsort(ra[:, cut], kind="stable")
+    order_b = np.argsort(rb[:, 0], kind="stable")
+    ra_s, rb_s = ra[order_a], rb[order_b]
+    ka, kb = ra_s[:, cut], rb_s[:, 0]
+
+    out_paths: List[np.ndarray] = []
+    out_lens: List[np.ndarray] = []
+    count = 0
+    # segment boundaries per key
+    a_start = np.searchsorted(ka, keys, side="left")
+    a_end = np.searchsorted(ka, keys, side="right")
+    b_start = np.searchsorted(kb, keys, side="left")
+    b_end = np.searchsorted(kb, keys, side="right")
+
+    A_BLOCK = 256  # bound the (na_blk, nb, cut, k-cut) clash tensor
+    for ki in range(keys.shape[0]):
+        na, nb = a_end[ki] - a_start[ki], b_end[ki] - b_start[ki]
+        if na == 0 or nb == 0:
+            continue
+        stats.pairs += int(na * nb)
+        A = ra_s[a_start[ki]:a_end[ki]]             # (na, cut+1)
+        B = rb_s[b_start[ki]:b_end[ki]]             # (nb, k-cut+1)
+        bi = B[:, 1:]                                # positions cut+1..k
+        bmask = bi != t
+        for a0 in range(0, na, A_BLOCK):
+            ai = A[a0:a0 + A_BLOCK, :cut]            # positions 0..cut-1
+            # cross-half simple-path check: a non-t vertex of the prefix
+            # interior must not reappear in the suffix interior.
+            clash = ((ai[:, None, :, None] == bi[None, :, None, :])
+                     & (ai != t)[:, None, :, None]
+                     & bmask[None, :, None, :]).any(axis=(2, 3))
+            ia, ib = np.nonzero(~clash)
+            if ia.size == 0:
+                continue
+            tuples = np.concatenate([ai[ia], B[ib]], axis=1)  # (r, k+1)
+            # trim t-padding: length = index of first t
+            is_t = tuples == t
+            lens = np.argmax(is_t, axis=1).astype(np.int32)
+            rows = tuples.copy()
+            col = np.arange(k + 1)[None, :]
+            rows[col > lens[:, None]] = PAD
+            if constraint is not None:
+                keep = constraint.check_full(idx, rows, lens)
+                rows, lens = rows[keep], lens[keep]
+            count += rows.shape[0]
+            stats.results += rows.shape[0]
+            if max_results is not None and count > max_results:
+                raise EngineLimit(f"more than {max_results} results")
+            if not count_only:
+                out_paths.append(rows)
+                out_lens.append(lens)
+
+    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)

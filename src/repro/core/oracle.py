@@ -1,0 +1,113 @@
+"""Ground-truth reference for HcPE: plain recursive backtracking (Alg. 1).
+
+Pure Python + numpy, deliberately simple.  Every engine path (IDX-DFS
+frontier enumerator, IDX-JOIN, constrained variants) is validated against
+this oracle as an exact *set* comparison — HcPE is set enumeration, emit
+order is not part of the contract.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .graph import Graph
+
+
+def bfs_dist_np(graph: Graph, src: int, k: int, reverse: bool = False,
+                excluded: Optional[int] = None) -> np.ndarray:
+    """Bounded BFS distance from ``src`` (or *to* src if reverse) ≤ k+1.
+
+    ``excluded`` is forbidden as a *transit* vertex (paper's G-{v}): it may
+    receive a distance (query endpoints must stay addressable so that
+    C_0 = {s} and t ∈ C_k) but is never expanded.
+    """
+    INF = k + 1
+    dist = np.full(graph.n, INF, dtype=np.int32)
+    dist[src] = 0
+    frontier = [src]
+    d = 0
+    indptr = graph.rindptr if reverse else graph.indptr
+    indices = graph.rindices if reverse else graph.indices
+    while frontier and d < k:
+        nxt = []
+        for u in frontier:
+            if u == excluded:
+                continue
+            for v in indices[indptr[u]:indptr[u + 1]]:
+                v = int(v)
+                if dist[v] > d + 1:
+                    dist[v] = d + 1
+                    nxt.append(v)
+        frontier = nxt
+        d += 1
+    return dist
+
+
+def enumerate_paths(graph: Graph, s: int, t: int, k: int,
+                    edge_pred: Optional[Callable[[int, int], bool]] = None,
+                    ) -> List[Tuple[int, ...]]:
+    """All simple paths s->t with ≤ k edges (interior vertices ∉ {s,t})."""
+    if s == t:
+        raise ValueError("s and t must be distinct")
+    # B(v): distance to t (for the standard hop-feasibility pruning of Alg. 1;
+    # does not change the result set, only the constant).
+    B = bfs_dist_np(graph, t, k, reverse=True)
+    out: List[Tuple[int, ...]] = []
+    M = [s]
+    on_path = {s}
+
+    def search() -> None:
+        v = M[-1]
+        if v == t:
+            out.append(tuple(M))
+            return
+        if len(M) - 1 >= k:
+            return
+        for v2 in graph.neighbors(v):
+            v2 = int(v2)
+            if v2 in on_path:
+                continue
+            if v2 == s:
+                continue
+            if edge_pred is not None and not edge_pred(v, v2):
+                continue
+            if (len(M) - 1) + 1 + B[v2] <= k:
+                M.append(v2)
+                on_path.add(v2)
+                search()
+                M.pop()
+                on_path.discard(v2)
+
+    search()
+    return sorted(out)
+
+
+def count_walks(graph: Graph, s: int, t: int, k: int) -> int:
+    """|W(s,t,k,G)| per Definition 2.1 (interior vertices ∉ {s,t}).
+
+    Used to validate the full-fledged cardinality estimator, which counts
+    walks exactly (Eq. 6/7) when run to convergence.
+    """
+    # adjacency restricted: no edges out of t, no edges into s
+    counts = np.zeros(graph.n, dtype=np.int64)
+    counts[s] = 1
+    total = 0
+    for _ in range(k):
+        nxt = np.zeros(graph.n, dtype=np.int64)
+        for u in range(graph.n):
+            if counts[u] == 0 or u == t:
+                continue
+            for v in graph.neighbors(u):
+                v = int(v)
+                if v == s:
+                    continue
+                nxt[v] += counts[u]
+        total += int(nxt[t])
+        nxt[t] = 0  # walks must stop at t (Definition 2.1)
+        counts = nxt
+    return total
+
+
+def paths_as_set(paths: Iterable[Tuple[int, ...]]) -> Set[Tuple[int, ...]]:
+    return set(tuple(int(x) for x in p) for p in paths)

@@ -1,0 +1,102 @@
+"""PathEnum facade — Figure 2's pipeline as a single entry point.
+
+    index build  →  preliminary estimate  →  (maybe) full DP + cut  →
+    IDX-DFS or IDX-JOIN  →  PathBatch
+
+`PathEnum.query` is the paper's q(s,t,k); constrained variants pass an
+Appendix-E constraint object.  All stages expose their timings so the
+benchmark harness can reproduce the paper's breakdowns (Fig. 7 / Fig. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import planner as planner_mod
+from .enumerate import EnumResult, enumerate_paths_idx
+from .graph import Graph
+from .index import LightweightIndex, build_index, build_index_jax
+from .join import enumerate_paths_join
+from .planner import DEFAULT_TAU, Plan
+
+
+@dataclasses.dataclass
+class QueryTiming:
+    index_seconds: float = 0.0
+    optimize_seconds: float = 0.0
+    enumerate_seconds: float = 0.0
+
+    @property
+    def total_seconds(self) -> float:
+        return self.index_seconds + self.optimize_seconds + self.enumerate_seconds
+
+
+@dataclasses.dataclass
+class QueryOutput:
+    result: EnumResult
+    plan: Plan
+    index: LightweightIndex
+    timing: QueryTiming
+
+
+class PathEnum:
+    """Engine facade.  mode: "auto" (paper's optimizer), "dfs", "join"."""
+
+    def __init__(self, tau: float = DEFAULT_TAU, chunk_size: int = 16384,
+                 use_jax_index: bool = False,
+                 max_partials: Optional[int] = 20_000_000):
+        self.tau = tau
+        self.chunk_size = chunk_size
+        self.use_jax_index = use_jax_index
+        self.max_partials = max_partials
+
+    def build(self, graph: Graph, s: int, t: int, k: int,
+              edge_mask=None) -> LightweightIndex:
+        if self.use_jax_index and edge_mask is None:
+            return build_index_jax(graph, s, t, k)
+        return build_index(graph, s, t, k, edge_mask=edge_mask)
+
+    def query(self, graph: Graph, s: int, t: int, k: int,
+              mode: str = "auto", count_only: bool = False,
+              first_n: Optional[int] = None, constraint=None,
+              edge_mask=None, cut: Optional[int] = None) -> QueryOutput:
+        if k < 2:
+            raise ValueError("paper assumes k >= 2")
+        timing = QueryTiming()
+        t0 = time.perf_counter()
+        idx = self.build(graph, s, t, k, edge_mask=edge_mask)
+        timing.index_seconds = time.perf_counter() - t0
+
+        if mode == "auto":
+            plan = planner_mod.plan_query(idx, tau=self.tau)
+        elif mode == "dfs":
+            plan = Plan(method="dfs", cut=None, preliminary=-1.0,
+                        used_full_estimator=False)
+        elif mode == "join":
+            if cut is None:
+                dp_plan = planner_mod.plan_query(idx, tau=-1.0)
+                cut = dp_plan.cut if dp_plan.cut else max(1, k // 2)
+            plan = Plan(method="join", cut=cut, preliminary=-1.0,
+                        used_full_estimator=True)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        timing.optimize_seconds = plan.optimize_seconds
+
+        t0 = time.perf_counter()
+        if plan.method == "dfs":
+            res = enumerate_paths_idx(idx, chunk_size=self.chunk_size,
+                                      count_only=count_only, first_n=first_n,
+                                      constraint=constraint)
+        else:
+            res = enumerate_paths_join(idx, cut=plan.cut,
+                                       count_only=count_only,
+                                       max_partials=self.max_partials,
+                                       constraint=constraint)
+        timing.enumerate_seconds = time.perf_counter() - t0
+        return QueryOutput(result=res, plan=plan, index=idx, timing=timing)
+
+    def count(self, graph: Graph, s: int, t: int, k: int, **kw) -> int:
+        return self.query(graph, s, t, k, count_only=True, **kw).result.count

@@ -1,0 +1,1 @@
+from .pipeline import PathCorpus, SyntheticLM, make_frontend_stub

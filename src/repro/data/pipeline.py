@@ -1,0 +1,122 @@
+"""Data pipeline: deterministic sharded token streams + the PathEnum bridge.
+
+Two sources:
+  * ``SyntheticLM`` — seeded zipfian token stream (infinite, restartable:
+    the stream position is part of the checkpoint manifest, so restarts
+    resume mid-epoch without data skew).
+  * ``PathCorpus`` — the paper-bridge (DESIGN.md §3): PathEnum result
+    batches rendered as token sequences ``[BOS, s, v1, ..., t, EOS]`` for
+    KG-completion-style training (motivation example 3 of the paper).
+
+Both emit host numpy batches shaped for `jax.device_put` with the batch
+sharding from distributed/sharding.py; per-host sharding takes
+(host_index, num_hosts) so each host materializes only its slice — the
+multi-host pattern the launcher uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.pathenum import PathEnum
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_index: int = 0
+    num_hosts: int = 1
+    zipf_a: float = 1.3
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_hosts == 0
+        self.local_batch = self.global_batch // self.num_hosts
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for a global step (restart-safe)."""
+        rng = np.random.default_rng(
+            (self.seed, step, self.host_index))
+        toks = rng.zipf(self.zipf_a, size=(self.local_batch, self.seq_len))
+        toks = np.minimum(toks, self.vocab - 1).astype(np.int32)
+        return {"tokens": toks, "labels": toks.copy()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+BOS, EOS, SEP = 0, 1, 2
+VERTEX_OFFSET = 3
+
+
+@dataclasses.dataclass
+class PathCorpus:
+    """Tokenized hop-constrained paths from the PathEnum engine."""
+    graph: Graph
+    k: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_index: int = 0
+    num_hosts: int = 1
+    max_paths_per_query: int = 4096
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_hosts == 0
+        self.local_batch = self.global_batch // self.num_hosts
+        self.engine = PathEnum()
+        self.vocab = self.graph.n + VERTEX_OFFSET
+
+    def _paths_for(self, rng) -> np.ndarray:
+        for _ in range(32):
+            s, t = rng.integers(0, self.graph.n, size=2)
+            if s == t:
+                continue
+            out = self.engine.query(self.graph, int(s), int(t), self.k,
+                                    mode="dfs",
+                                    first_n=self.max_paths_per_query)
+            if out.result.count > 0:
+                return out.result.paths, out.result.lengths
+        return (np.zeros((0, self.k + 1), np.int32),
+                np.zeros((0,), np.int32))
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step, self.host_index))
+        rows = np.full((self.local_batch, self.seq_len), -1, np.int32)
+        filled = 0
+        while filled < self.local_batch:
+            paths, lens = self._paths_for(rng)
+            if paths.shape[0] == 0:
+                rows[filled:, :] = EOS
+                break
+            take = min(self.local_batch - filled, paths.shape[0])
+            for i in range(take):
+                seq = [BOS] + [int(v) + VERTEX_OFFSET
+                               for v in paths[i, : lens[i] + 1]] + [EOS]
+                seq = seq[: self.seq_len]
+                rows[filled + i, : len(seq)] = seq
+            filled += take
+        tokens = np.where(rows >= 0, rows, EOS).astype(np.int32)
+        labels = np.where(rows >= 0, rows, -1).astype(np.int32)
+        return {"tokens": tokens, "labels": labels}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_frontend_stub(rng: np.random.Generator, batch: int, prefix_len: int,
+                       d_model: int) -> np.ndarray:
+    """Precomputed frame/patch embeddings for [vlm]/[audio] frontends."""
+    return (rng.standard_normal((batch, prefix_len, d_model)) * 0.02
+            ).astype(np.float32)

@@ -1,0 +1,99 @@
+"""Activation sharding constraints (Megatron-style, GSPMD-mediated).
+
+``constrain(x, builder)`` applies jax.lax.with_sharding_constraint using the
+*ambient* mesh (jax.set_mesh context).  Outside any mesh — CPU unit tests,
+the quickstart examples — it is a no-op, so model code can sprinkle
+constraints unconditionally.  Builders get a ShardingRules so every axis
+choice inherits the divisibility fallbacks.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .sharding import ShardingRules
+
+
+def current_rules() -> Optional[ShardingRules]:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty:
+        return None
+    return ShardingRules(mesh)
+
+
+def constrain(x, builder: Callable[[ShardingRules, Tuple[int, ...]], P]):
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = builder(rules, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# -- common builders ---------------------------------------------------------
+
+def act_bsd(rules: ShardingRules, shape) -> P:
+    """(B, S, D) layer-boundary activation: batch over the dp group."""
+    return P(rules.dp(shape[0]), None, None)
+
+
+def act_bsd_sp(rules: ShardingRules, shape) -> P:
+    """(B, S, D) residual with sequence parallelism: seq over model."""
+    return P(rules.dp(shape[0]), rules.tp(shape[1]), None)
+
+
+def act_bsf(rules: ShardingRules, shape) -> P:
+    """(B, S, F) projected activation: batch over dp, features over model.
+
+    Without this constraint GSPMD resolves the FSDP-weight × batch-sharded
+    activation contraction conflict by *replicating the batch* — measured
+    +50 GB/device of all-reduce on a 2-layer llama3.2 train step.
+    """
+    return P(rules.dp(shape[0]), None, rules.tp(shape[-1]))
+
+
+def act_tokens_f(rules: ShardingRules, shape) -> P:
+    """(T, F) flattened-token activation (MoE router / dispatch)."""
+    return P(rules.dp(shape[0]), rules.tp(shape[-1]))
+
+
+def moe_slots(rules: ShardingRules, shape) -> P:
+    """(E, cap, D) expert dispatch slots: experts over model (EP)."""
+    return P(rules.tp(shape[0]), None, None)
+
+
+def ssd_intra(rules: ShardingRules, shape) -> P:
+    """(B, nc, Q, Q, H) SSD intra-chunk tensors: heads over model."""
+    return P(rules.dp(shape[0]), None, None, None, rules.tp(shape[-1]))
+
+
+def logits_bsv(rules: ShardingRules, shape) -> P:
+    """(B, S, V) LM logits: batch over dp, vocab over model."""
+    return P(rules.dp(shape[0]), None, rules.tp(shape[-1]))
+
+
+def act_heads(rules: ShardingRules, shape) -> P:
+    """(B, L, H, hd): shard heads over model, else sequence, else batch only.
+
+    The head fallback chain is the GQA story: H ∈ {36, 40} (starcoder2,
+    llama4) does not divide a 16-way model axis, so those archs run
+    sequence-parallel attention instead (context parallelism) — recorded
+    per-cell by the dry-run.
+    """
+    b, l, h, hd = shape
+    if rules.tp(h):
+        return P(rules.dp(b), None, rules.tp(h), None)
+    if rules.tp(l):
+        return P(rules.dp(b), rules.tp(l), None, None)
+    return P(rules.dp(b), None, None, None)
+
+
+def logits_bhqk(rules: ShardingRules, shape) -> P:
+    """(B, H, Q, K) attention logits: follow the same head/seq fallback."""
+    b, h, q, k = shape
+    if rules.tp(h):
+        return P(rules.dp(b), rules.tp(h), None, None)
+    if rules.tp(q):
+        return P(rules.dp(b), None, rules.tp(q), None)
+    return P(rules.dp(b), None, None, None)

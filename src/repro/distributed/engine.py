@@ -1,0 +1,173 @@
+"""Distributed PathEnum — the paper's pipeline sharded over a mesh.
+
+Decomposition (DESIGN.md §2, last bullet):
+  * **query axis = `data`** — HcPE queries are independent; a batch of
+    queries (the paper's online workload: 1000-query sets, §7.1) shards
+    across the data axis, each shard running the full per-query pipeline.
+  * **graph axis = `model`** — for graphs too large for one device's HBM
+    (the paper's tm, 1.96B edges ≈ 16 GB in CSR), the *edge list* shards
+    1-D across the model axis; BFS relaxation and the walk-count DP become
+    local scatter-min / scatter-add followed by an element-wise cross-shard
+    combine (`pmin` / `psum`) on the (n,) frontier vector — the classic
+    distributed-SpMV decomposition.
+
+These device kernels cover the two phases that bound the paper's response
+time at scale (Fig. 12a: BFS dominates index build; Alg. 5 is k more edge
+sweeps).  Enumeration itself is output-bound and embarrassingly parallel
+across queries; each query's frontier expansion runs on its data-shard
+(host-driven chunks, core/enumerate.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.graph import Graph
+
+
+def _pad_edges(esrc: np.ndarray, edst: np.ndarray, shards: int):
+    m = esrc.shape[0]
+    pad = (-m) % shards
+    if pad:
+        # self-loops on vertex 0 are inert for BFS (min) and masked for DP
+        esrc = np.concatenate([esrc, np.zeros(pad, esrc.dtype)])
+        edst = np.concatenate([edst, np.zeros(pad, edst.dtype)])
+    valid = np.ones(esrc.shape[0], bool)
+    if pad:
+        valid[-pad:] = False
+    return esrc, edst, valid
+
+
+def make_distributed_bfs(mesh: Mesh, n: int, k: int):
+    """Returns bfs(esrc, edst, valid, srcs, excludeds) -> (Q, n) distances.
+
+    Edges shard over `model`; queries shard over `data`.  Inside the
+    shard_map each device relaxes its edge slice for its query slice, then
+    a `pmin` over `model` merges the per-shard distance vectors.
+    """
+    INF = jnp.int32(k + 1)
+
+    def one_query(esrc_l, edst_l, valid_l, src, excluded):
+        dist = jnp.full((n,), INF, jnp.int32).at[src].set(0)
+
+        def body(_, dist):
+            cand = jnp.where((esrc_l == excluded) | ~valid_l, INF,
+                             dist[esrc_l] + 1)
+            new = dist.at[edst_l].min(cand)
+            new = jnp.minimum(new, INF)
+            return jax.lax.pmin(new, "model")
+
+        return jax.lax.fori_loop(0, k, body, dist)
+
+    def kernel(esrc_l, edst_l, valid_l, srcs_l, exc_l):
+        f = jax.vmap(one_query, in_axes=(None, None, None, 0, 0))
+        return f(esrc_l, edst_l, valid_l, srcs_l, exc_l)
+
+    mapped = jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P("model"), P("model"), P("model"), P("data"), P("data")),
+        out_specs=P("data"),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def make_distributed_walk_dp(mesh: Mesh, n: int, k: int):
+    """Returns dp(esrc, edst, valid, dist_s (Q,n), dist_t (Q,n)) ->
+    (q_prefix (Q,k+1), q_suffix (Q,k+1), total (Q,)) — Alg. 5 at scale.
+
+    Counting-semiring SpMV per level with `psum` over the edge shards; the
+    (t,t) self-loop is applied on the host-visible t slot via the dist_t==0
+    mask (dist_t[t] = 0 uniquely identifies t).
+    """
+
+    def one_query(esrc_l, edst_l, valid_l, ds, dt):
+        lvl = lambda i: (ds <= i) & (dt <= (k - i))
+        is_t = (dt == 0).astype(jnp.float32)
+
+        def bwd_step(i, c):
+            # c = c_k^{i+1}; produce c_k^i
+            m = valid_l & (dt[edst_l] <= (k - i - 1))
+            contrib = jnp.zeros((n,), jnp.float32).at[esrc_l].add(
+                jnp.where(m, c[edst_l], 0.0))
+            contrib = jax.lax.psum(contrib, "model")
+            contrib = contrib + is_t * c  # (t,t) self-loop
+            return jnp.where(lvl(i), contrib, 0.0)
+
+        def fwd_step(i, c):
+            m = valid_l & (ds[esrc_l] <= (i - 1))
+            contrib = jnp.zeros((n,), jnp.float32).at[edst_l].add(
+                jnp.where(m, c[esrc_l], 0.0))
+            contrib = jax.lax.psum(contrib, "model")
+            contrib = contrib + is_t * c
+            return jnp.where(lvl(i), contrib, 0.0)
+
+        c_to = jnp.where(lvl(k), 1.0, 0.0)
+        q_suffix = jnp.zeros((k + 1,), jnp.float32).at[k].set(c_to.sum())
+        def bwd_loop(idx, carry):
+            c, qs = carry
+            i = k - 1 - idx
+            c = bwd_step(i, c)
+            return c, qs.at[i].set(c.sum())
+        c_to, q_suffix = jax.lax.fori_loop(0, k, bwd_loop, (c_to, q_suffix))
+
+        c_from = jnp.where(lvl(0), 1.0, 0.0)
+        q_prefix = jnp.zeros((k + 1,), jnp.float32).at[0].set(c_from.sum())
+        def fwd_loop(i, carry):
+            c, qp = carry
+            c = fwd_step(i, c)
+            return c, qp.at[i].set(c.sum())
+        c_from, q_prefix = jax.lax.fori_loop(1, k + 1, fwd_loop,
+                                             (c_from, q_prefix))
+        total = (c_from * is_t).sum()
+        return q_prefix, q_suffix, total
+
+    def kernel(esrc_l, edst_l, valid_l, ds_l, dt_l):
+        f = jax.vmap(one_query, in_axes=(None, None, None, 0, 0))
+        return f(esrc_l, edst_l, valid_l, ds_l, dt_l)
+
+    mapped = jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P("model"), P("model"), P("model"), P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P("data")),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+class DistributedPathEnum:
+    """Query-batched index distances + cardinality estimation on a mesh."""
+
+    def __init__(self, mesh: Mesh, graph: Graph, k: int):
+        self.mesh = mesh
+        self.graph = graph
+        self.k = k
+        shards = mesh.shape["model"]
+        es, ed, valid = _pad_edges(graph.esrc, graph.edst, shards)
+        eshard = NamedSharding(mesh, P("model"))
+        self.esrc = jax.device_put(jnp.asarray(es), eshard)
+        self.edst = jax.device_put(jnp.asarray(ed), eshard)
+        self.valid = jax.device_put(jnp.asarray(valid), eshard)
+        self._bfs = make_distributed_bfs(mesh, graph.n, k)
+        self._dp = make_distributed_walk_dp(mesh, graph.n, k)
+
+    def query_batch_stats(self, queries: np.ndarray):
+        """queries (Q, 2) of (s, t) — Q must divide the data axis.
+
+        Returns (q_prefix, q_suffix, totals) per query; `totals` is δ_W,
+        the full-fledged estimator output (exact walk counts).
+        """
+        q = np.asarray(queries, np.int32)
+        srcs, tgts = jnp.asarray(q[:, 0]), jnp.asarray(q[:, 1])
+        dshard = NamedSharding(self.mesh, P("data"))
+        srcs = jax.device_put(srcs, dshard)
+        tgts = jax.device_put(tgts, dshard)
+        ds = self._bfs(self.esrc, self.edst, self.valid, srcs, tgts)
+        # reverse BFS: swap edge direction by swapping src/dst arrays
+        dt = self._bfs(self.edst, self.esrc, self.valid, tgts, srcs)
+        qp, qs, tot = self._dp(self.esrc, self.edst, self.valid, ds, dt)
+        return np.asarray(qp), np.asarray(qs), np.asarray(tot), (
+            np.asarray(ds), np.asarray(dt))

@@ -1,0 +1,192 @@
+"""Sharding rules: FSDP(data[,pod]) × TP(model) with divisibility fallbacks.
+
+Strategy (DESIGN.md §5):
+  * train — parameters/optimizer state shard over BOTH the fsdp group
+    (``("pod","data")`` when multi-pod) and ``model`` (ZeRO-3 × tensor
+    parallel).  Column-parallel in-projections (D→F sharded on F), row-
+    parallel out-projections (F→D sharded on F), expert dimension of MoE
+    stacks over ``model`` (expert parallelism), batch over the fsdp group.
+  * serve — same param specs work (XLA re-shards activations); KV caches
+    shard batch over the fsdp group and heads (or head_dim when the GQA
+    head count doesn't divide — kv∈{1,4,8} < 16) over ``model``; the
+    long_500k cell (batch=1) falls back to sequence-sharded caches.
+
+Every rule goes through ``_pick`` — the first candidate axis (group) that
+divides the dimension wins, else the dim is replicated.  This is what lets
+one rule set serve vocab 50280 (mamba2, ∤16) and vocab 202048 alike; the
+dry-run JSON records the chosen spec per cell so the fallbacks are visible.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+
+def mesh_axis_size(mesh: Mesh, names) -> int:
+    size = 1
+    for n in ([names] if isinstance(names, str) else names):
+        size *= mesh.shape[n]
+    return size
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        self.fsdp_group: Tuple[str, ...] = tuple(
+            n for n in ("pod", "data") if n in names)
+        self.model_axis = "model" if "model" in names else None
+
+    # -- candidate pickers ----------------------------------------------
+    def _div(self, dim: int, names) -> bool:
+        return dim % mesh_axis_size(self.mesh, names) == 0
+
+    def fsdp(self, dim: int):
+        for cand in (self.fsdp_group, ("data",), ("pod",)):
+            cand = tuple(n for n in cand if n in self.mesh.axis_names)
+            if cand and self._div(dim, cand):
+                return cand if len(cand) > 1 else cand[0]
+        return None
+
+    def tp(self, dim: int):
+        if self.model_axis and self._div(dim, self.model_axis):
+            return self.model_axis
+        return None
+
+    def dp(self, dim: int):
+        return self.fsdp(dim)
+
+    # -- parameter rules --------------------------------------------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        parts = path.split("/")
+        name = parts[-1]
+        stacked = parts[0] == "supers"
+        dims = shape[1:] if stacked else shape
+        lead = (None,) if stacked else ()
+
+        def spec(*axes):
+            return P(*(lead + tuple(axes)))
+
+        # --- scalars / norms / per-channel vectors: replicate ---
+        if name in ("ln1", "ln2", "norm", "final_norm", "lam", "A_log", "D",
+                    "dt_bias", "step") or len(dims) <= 1:
+            return spec(*(None,) * len(dims))
+        in_moe = "moe" in parts[-2:-1] or (len(parts) >= 2 and parts[-2] == "moe")
+        if in_moe and name in ("w_gate", "w_up") and len(dims) == 3:
+            e, d, f = dims
+            return spec(self.tp(e), self.fsdp(d), None)
+        if in_moe and name == "w_down" and len(dims) == 3:
+            e, f, d = dims
+            return spec(self.tp(e), None, self.fsdp(d))
+        if name == "router":
+            d, e = dims
+            return spec(self.fsdp(d), self.tp(e))
+        if name == "embed":
+            # vocab-parallel (tp on V): logits inherit model-sharded vocab so
+            # the (B, S, V) loss tensor never replicates — critical for the
+            # tied-embedding archs where embed.T is the LM head.  Odd vocabs
+            # (mamba2's 50280 ∤ 16) fall back to fsdp-sharded V, else fully
+            # replicated — NEVER model-sharded D: a D-sharded gather output
+            # being resharded inside a loop body trips the SPMD partitioner
+            # (hlo-verifier dynamic-slice fault, see EXPERIMENTS.md §Perf).
+            v, d = dims
+            tv = self.tp(v)
+            if tv:
+                return spec(tv, self.fsdp(d))
+            fv = self.fsdp(v)
+            if fv:
+                return spec(fv, None)
+            return spec(None, None)
+        if name == "head":
+            d, v = dims
+            return spec(self.fsdp(d), self.tp(v))
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_x",
+                    "w_gate_out", "frontend_proj", "w_in_gate", "w_rec_gate"):
+            d, f = dims
+            return spec(self.fsdp(d), self.tp(f))
+        if name in ("wo", "w_down", "out_proj", "w_out"):
+            f, d = dims
+            return spec(self.tp(f), self.fsdp(d))
+        if name == "conv_w":
+            c, w = dims
+            return spec(self.tp(c), None)
+        # default: replicate
+        return spec(*(None,) * len(dims))
+
+    # -- cache rules -------------------------------------------------------
+    def cache_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        parts = path.split("/")
+        stacked = parts[0] == "supers"
+        dims = shape[1:] if stacked else shape
+        lead = (None,) if stacked else ()
+
+        def spec(*axes):
+            return P(*(lead + tuple(axes)))
+
+        if "ssm" in path and len(dims) == 4:  # ssd state (B, H, N, P)
+            b, nh, ns_, hd = dims
+            return spec(self.dp(b), self.tp(nh), None, None)
+        if len(dims) == 4:  # kv cache (B, S, Hkv, hd)
+            b, s, hkv, hd = dims
+            bspec = self.dp(b)
+            sspec = None if bspec is not None else self.dp(s)
+            hspec = self.tp(hkv)
+            dspec = None if hspec is not None else self.tp(hd)
+            return spec(bspec, sspec, hspec, dspec)
+        if len(dims) == 3:  # conv state (B, W-1, C)
+            b, w, c = dims
+            return spec(self.dp(b), None, self.tp(c))
+        if len(dims) == 2:  # rec h (B, W)
+            b, w = dims
+            return spec(self.dp(b), self.tp(w))
+        if len(dims) == 5:  # ssm h stacked oddity safeguard
+            return spec(*(None,) * len(dims))
+        return spec(*(None,) * len(dims))
+
+    # -- batch rules ---------------------------------------------------------
+    def batch_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        b = shape[0]
+        return P(self.dp(b), *(None,) * (len(shape) - 1))
+
+
+def path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def tree_specs(tree, rule) -> Any:
+    """Map a (template) pytree to PartitionSpecs via rule(path, shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: rule(path_str(p), np.shape(leaf)), tree)
+
+
+def tree_shardings(mesh: Mesh, specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(mesh: Mesh, cfg: ArchConfig, params_template):
+    rules = ShardingRules(mesh)
+    return tree_specs(params_template, rules.param_spec)
+
+
+def opt_shardings(param_specs, opt_template):
+    """Optimizer state reuses param specs for mu/nu, replicates step."""
+    from ..optim.adamw import AdamWState
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, cache_template):
+    rules = ShardingRules(mesh)
+    return tree_specs(cache_template, rules.cache_spec)
+
+
+def batch_shardings(mesh: Mesh, batch_template):
+    rules = ShardingRules(mesh)
+    return tree_specs(batch_template, rules.batch_spec)

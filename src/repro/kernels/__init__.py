@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots (DESIGN.md §5).
+
+semiring_spmm   — PathEnum BFS relaxation (min-plus) + walk-count DP (+,×)
+flash_attention — blocked online-softmax GQA attention (train/prefill)
+decode_attention— single-token GQA decode over long KV caches
+
+Validated on CPU via interpret=True against the pure-jnp oracles in ref.py.
+"""
+from . import ops, ref
+from .ops import (bfs_dense, counting_spmm, decode_attention, flash_attention,
+                  minplus_spmv)

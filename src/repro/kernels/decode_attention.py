@@ -1,0 +1,102 @@
+"""Single-token GQA decode attention over a (possibly long) KV cache.
+
+The decode_32k / long_500k shapes are memory-bound: one query row must
+stream S·Hkv·D·2 cache bytes.  The kernel tiles the cache sequence in
+BS=512 blocks, keeps the online-softmax state in VMEM scratch, and — the
+GQA trick that matters at kv=1..8 — processes *all* heads of one KV group
+against each streamed KV tile, so cache bytes are read once per group
+rather than once per head (arithmetic intensity × group).
+
+Grid = (B, Hkv, S/BS): per (batch, kv-head) the cache tiles stream in
+order; the query block is the (group, D) slice of that head group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale, bs, group):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    base = si * bs
+
+    @pl.when(base < length)
+    def _step():
+        q = q_ref[...].reshape(group, -1).astype(jnp.float32)   # (G, D)
+        k = k_ref[...].reshape(bs, -1).astype(jnp.float32)      # (BS, D)
+        v = v_ref[...].reshape(bs, -1).astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale          # (G, BS)
+        valid = (base + jax.lax.broadcasted_iota(jnp.int32, (group, bs), 1)
+                 ) < length
+        logits = jnp.where(valid, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).reshape(o_ref.shape).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                     scale: float | None = None, bs: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q (B, H, D); k_cache/v_cache (B, S, Hkv, D); lengths (B,) int32."""
+    B, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    assert H % Hkv == 0
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    assert S % bs == 0, "ops.py pads the cache to a bs multiple"
+    grid = (B, Hkv, S // bs)
+    # view q as (B, Hkv, group, D) so one block = one KV group's queries
+    qg = q.reshape(B, Hkv, group, D)
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=bs, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si: (b,)),
+            pl.BlockSpec((1, 1, group, D), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, si: (b, si, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, si: (b, si, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, si: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache).reshape(B, H, D)

@@ -1,0 +1,127 @@
+"""Blocked online-softmax (flash) attention, GQA-aware — LM hot spot.
+
+Tiling: Q rows in BQ=128 blocks, KV in BK=128 blocks (VMEM working set
+per step: BQ·D + 2·BK·D + BQ·BK floats — well under the 16 MiB v5e VMEM
+for D ≤ 256).  Grid = (B, H, Lq/BQ, Lk/BK); the kv dimension is the
+innermost ("arbitrary") axis so the f32 scratch accumulators (running max
+m, denominator l, weighted acc) persist across it.  GQA is handled in the
+K/V index_map (kv head = h // group) so no repeated-KV materialization
+ever happens — the kernel reads each KV tile once per query-head group.
+
+Causal + sliding-window masking is applied from global indices; fully
+masked KV tiles are skipped by an early `pl.when` guard (this is the
+block-sparsity that makes window attention (RecurrentGemma) linear-cost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, bq, bk, lk_offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # global row/col positions (rows are offset when Lq < Lk: decode windows)
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + lk_offset
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if causal:
+        mask = rows >= cols
+        if window is not None:
+            mask &= (rows - cols) < window
+    else:
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+
+    def _step():
+        q = q_ref[...].reshape(bq, -1).astype(jnp.float32)
+        k = k_ref[...].reshape(bk, -1).astype(jnp.float32)
+        v = v_ref[...].reshape(bk, -1).astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip KV tiles strictly above the diagonal band
+        first_row = qi * bq + lk_offset
+        last_row = first_row + bq - 1
+        first_col = ki * bk
+        last_col = first_col + bk - 1
+        visible = first_col <= last_row
+        if window is not None:
+            visible &= last_col > first_row - window
+        pl.when(visible)(_step)
+    else:
+        _step()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).reshape(o_ref.shape).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B, Lq, H, D); k/v (B, Lk, Hkv, D); returns (B, Lq, H, D).
+
+    Lq % bq == 0 and Lk % bk == 0 (ops.py pads + re-slices).
+    """
+    B, Lq, H, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    assert H % Hkv == 0, "GQA requires H divisible by Hkv"
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    assert Lq % bq == 0 and Lk % bk == 0
+    grid = (B, H, Lq // bq, Lk // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, lk_offset=Lk - Lq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, g=group: (b, ki, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, g=group: (b, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Lq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),   # running max m
+            pltpu.VMEM((bq,), jnp.float32),   # running denominator l
+            pltpu.VMEM((bq, D), jnp.float32), # weighted accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

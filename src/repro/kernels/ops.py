@@ -1,0 +1,137 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: shape/alignment padding (kernels demand block multiples),
+dtype plumbing, and the interpret switch — on the CPU validation container
+kernels execute via ``interpret=True`` (the Pallas interpreter runs the
+kernel body in Python); on TPU the same call sites compile to Mosaic.
+Set REPRO_PALLAS=off to route every op to its pure-jnp reference instead
+(used to A/B the kernels inside the full system).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .semiring_spmm import BLOCK, counting_spmm as _counting_pallas
+from .semiring_spmm import minplus_spmv as _minplus_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _enabled() -> bool:
+    return os.environ.get("REPRO_PALLAS", "on") != "off"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# PathEnum semiring ops
+# ---------------------------------------------------------------------------
+
+def minplus_spmv(adj: jnp.ndarray, dist: jnp.ndarray, *, inf: float,
+                 block: int = BLOCK) -> jnp.ndarray:
+    """BFS relaxation step; pads n to the tile size."""
+    if not _enabled():
+        return ref.minplus_spmv_ref(adj, dist, inf)
+    n = adj.shape[0]
+    adj_p = _pad_to(_pad_to(adj, 0, block, inf), 1, block, inf)
+    dist_p = _pad_to(dist, 0, block, inf)
+    out = _minplus_pallas(adj_p, dist_p, inf=inf, interpret=_interpret(),
+                          block=block)
+    return out[:n]
+
+
+def counting_spmm(adj_mask: jnp.ndarray, counts: jnp.ndarray, *,
+                  block: int = BLOCK) -> jnp.ndarray:
+    """Walk-count DP level for a query batch; pads (n, q) to tiles."""
+    if not _enabled():
+        return ref.counting_spmm_ref(adj_mask, counts)
+    n, q = counts.shape
+    adj_p = _pad_to(_pad_to(adj_mask, 0, block, 0), 1, block, 0)
+    cnt_p = _pad_to(_pad_to(counts, 0, block, 0), 1, block, 0)
+    out = _counting_pallas(adj_p, cnt_p, interpret=_interpret(), block=block)
+    return out[:n, :q]
+
+
+def bfs_dense(adj: jnp.ndarray, src: int | jnp.ndarray, k: int, *,
+              inf: float = 1e9, block: int = BLOCK) -> jnp.ndarray:
+    """Bounded BFS over a dense adjacency via k min-plus relaxations.
+
+    This is the Pallas-kernel twin of core.bfs.bfs_edge_relax for the
+    dense-tile regime (small/medium graphs, or per-partition tiles of the
+    distributed engine).
+    """
+    n = adj.shape[0]
+    dist = jnp.full((n,), inf, dtype=jnp.float32).at[src].set(0.0)
+
+    def body(_, d):
+        return minplus_spmv(adj, d, inf=inf, block=block)
+
+    return jax.lax.fori_loop(0, k, body, dist)
+
+
+# ---------------------------------------------------------------------------
+# LM attention ops
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 128,
+                    bk: int = 128) -> jnp.ndarray:
+    if not _enabled():
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale, window=window)
+    B, Lq, H, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    bq_eff = min(bq, max(8, Lq))
+    bk_eff = min(bk, max(8, Lk))
+    needs_pad = (Lq % bq_eff != 0) or (Lk % bk_eff != 0)
+    if needs_pad and (not causal or Lq != Lk):
+        # Padding shifts the causal diagonal when Lq != Lk; production
+        # shapes (4k/32k/500k) are tile-aligned so this fallback only
+        # serves ragged test shapes.
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale, window=window)
+    if needs_pad:
+        # Lq == Lk: pad both ends equally.  Padded KV columns sit past every
+        # real row index so the causal mask removes them; padded Q rows are
+        # sliced off below.
+        q = _pad_to(q, 1, bq_eff, 0)
+        k = _pad_to(k, 1, bk_eff, 0)
+        v = _pad_to(v, 1, bk_eff, 0)
+        if q.shape[1] != k.shape[1]:
+            pad_len = max(q.shape[1], k.shape[1])
+            q = _pad_to(q, 1, pad_len, 0)
+            k = _pad_to(k, 1, pad_len, 0)
+            v = _pad_to(v, 1, pad_len, 0)
+    out = _flash_pallas(q, k, v, causal=causal, window=window,
+                        scale=scale, bq=bq_eff, bk=bk_eff,
+                        interpret=_interpret())
+    return out[:, :Lq]
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None,
+                     bs: int = 512) -> jnp.ndarray:
+    if not _enabled():
+        return ref.decode_attention_ref(q, k_cache, v_cache, lengths,
+                                        scale=scale)
+    B, S, Hkv, D = k_cache.shape
+    bs_eff = min(bs, max(8, S))
+    k_p = _pad_to(k_cache, 1, bs_eff, 0)
+    v_p = _pad_to(v_cache, 1, bs_eff, 0)
+    return _decode_pallas(q, k_p, v_p, lengths, scale=scale, bs=bs_eff,
+                          interpret=_interpret())

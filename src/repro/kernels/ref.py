@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert allclose against these functions (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Semiring SpMM (PathEnum BFS relaxation + walk-count DP)
+# ---------------------------------------------------------------------------
+
+def minplus_spmv_ref(adj: jnp.ndarray, dist: jnp.ndarray,
+                     inf: float) -> jnp.ndarray:
+    """One min-plus relaxation: out[v] = min(dist[v], min_u adj[u,v]+dist[u]).
+
+    adj is a dense (n, n) matrix with 1.0 where an edge u->v exists and
+    ``inf`` elsewhere (weights generalize to weighted graphs).
+    """
+    cand = jnp.min(adj + dist[:, None], axis=0)
+    return jnp.minimum(dist, jnp.minimum(cand, inf))
+
+
+def counting_spmv_ref(adj_mask: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """One plus-times pass of the walk DP: out[u] = Σ_v adj[u,v] * counts[v].
+
+    adj_mask is (n, n) {0,1}; counts float32.  This is Eq. 7's inner sum.
+    """
+    return adj_mask.astype(counts.dtype) @ counts
+
+
+def counting_spmm_ref(adj_mask: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Batched walk DP: counts (n, q) — q independent queries at once."""
+    return adj_mask.astype(counts.dtype) @ counts
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (LM prefill / train)
+# ---------------------------------------------------------------------------
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True, scale: float | None = None,
+            window: int | None = None) -> jnp.ndarray:
+    """Reference attention.  q (B, Lq, H, D), k/v (B, Lk, Hkv, D) with GQA
+    broadcast when H != Hkv.  Optional causal mask and local window."""
+    B, Lq, H, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    group = H // Hkv
+    kq = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vq = jnp.repeat(v, group, axis=2) if group > 1 else v
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kq).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        ki = jnp.arange(Lk)[None, :]
+        mask = qi >= ki
+        if window is not None:
+            mask &= (qi - ki) < window
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vq.dtype), vq)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                         scale: float | None = None) -> jnp.ndarray:
+    """Single-token GQA decode.  q (B, H, D); caches (B, S, Hkv, D);
+    lengths (B,) valid prefix lengths."""
+    B, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    group = H // Hkv
+    kq = jnp.repeat(k_cache, group, axis=2) if group > 1 else k_cache
+    vq = jnp.repeat(v_cache, group, axis=2) if group > 1 else v_cache
+    logits = jnp.einsum("bhd,bshd->bhs", q, kq).astype(jnp.float32) * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p.astype(vq.dtype), vq)
+    return out.astype(q.dtype)

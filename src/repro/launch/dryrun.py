@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces (written incrementally to
+experiments/dryrun/<cell>.json):
+  * memory_analysis  — per-device argument/output/temp bytes (fits HBM?)
+  * cost_analysis    — HLO flops / bytes accessed (per device, SPMD module)
+  * collective bytes — summed operand sizes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+                       parsed from the compiled HLO (per device)
+  * the sharding decisions actually taken (kv_shard fallbacks etc.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2_780m \
+      --shape long_500k --mesh multi
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _line_group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_V1_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device *operand* bytes per collective kind, from the partitioned
+    HLO.  Post-opt HLO prints operands as bare %refs, so sizes come from the
+    result type: operand == result for all-reduce / all-to-all / permute;
+    result/group for all-gather; result*group for reduce-scatter.  Also
+    records ring-model wire bytes (what actually crosses ICI per device):
+    ag/rs ≈ operand*(g-1) resp. result*(g-1); ar ≈ 2*operand*(g-1)/g.
+    """
+    out: Dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        lhs = line[:m.start()]
+        if "=" not in lhs:
+            continue
+        kind = m.group(1)
+        # result type(s) sit between '=' and the op name; tuple types may
+        # carry /*index=N*/ comments, so just collect every dtype[shape]
+        restype = lhs.split("=", 1)[1]
+        rbytes = 0
+        for sm in _SHAPE_RE.finditer(restype):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            rbytes += n * _DTYPE_BYTES[dt]
+        g = max(_line_group_size(line), 1)
+        if kind == "all-gather":
+            operand = rbytes / g
+            wire += operand * (g - 1)
+        elif kind == "reduce-scatter":
+            operand = rbytes * g
+            wire += rbytes * (g - 1)
+        elif kind == "all-reduce":
+            operand = rbytes
+            wire += 2.0 * rbytes * (g - 1) / g
+        else:  # all-to-all / collective-permute
+            operand = rbytes
+            wire += rbytes
+        out[kind] = out.get(kind, 0) + operand
+    out["total_operand"] = sum(v for k, v in out.items())
+    out["wire_bytes"] = wire
+    return out
+
+
+def spec_tree_to_json(specs) -> Any:
+    return jax.tree.map(
+        lambda s: str(s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _costs_of(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": ca.get("flops", 0.0),
+           "bytes": ca.get("bytes accessed", 0.0),
+           "transcendentals": ca.get("transcendentals", 0.0)}
+    for k, v in coll.items():
+        out[f"coll/{k}"] = v
+    return out
+
+
+def extrapolate_costs(c1: Dict[str, float], c2: Dict[str, float],
+                      ns: int) -> Dict[str, float]:
+    """Layer-linear cost model: f(ns) = f(1) + (ns-1)·(f(2)-f(1)).
+
+    XLA cost analysis counts while-loop bodies once (verified empirically),
+    so scanned production lowerings undercount per-layer work.  The
+    analysis twins unroll 1 and 2 super-blocks (identical math, Python
+    layer loop, single-chunk attention); their difference is exactly one
+    super-block's true cost, and the stack is homogeneous by construction.
+    """
+    out = {}
+    for k in c1:
+        body = max(c2.get(k, 0.0) - c1[k], 0.0)
+        out[k] = c1[k] + (ns - 1) * body
+    return out
+
+
+def analyze_memory(compiled) -> Dict[str, Any]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_estimate_bytes": ma.argument_size_in_bytes
+        + ma.output_size_in_bytes + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             microbatches: int = 1, out_dir: str = "experiments/dryrun",
+             attn_chunk: int | None = None,
+             seq_shard: bool = False,
+             unroll_accum: bool = False) -> Dict[str, Any]:
+    from ..configs import get_arch, get_shape
+    from ..distributed import sharding as shard_mod
+    from ..launch import specs as specs_mod
+    from ..launch.mesh import make_production_mesh
+    from ..models import transformer
+    from ..optim import adamw
+    from ..training import step as step_mod
+    import dataclasses
+
+    cfg = get_arch(arch)
+    if attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    if seq_shard:
+        cfg = dataclasses.replace(cfg, seq_shard_activations=True)
+    shape = get_shape(shape_name)
+    supported, reason = cfg.shape_supported(shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "microbatches": microbatches,
+        "params_B": cfg.param_count() / 1e9,
+        "active_params_B": cfg.active_param_count() / 1e9,
+    }
+    if not supported:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        return record
+
+    from ..models.transformer import layer_plan
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    record["chips"] = chips
+    rules = shard_mod.ShardingRules(mesh)
+
+    def build(c):
+        params_t = specs_mod.param_specs(c)
+        pspecs = shard_mod.tree_specs(params_t, rules.param_spec)
+        pshard = shard_mod.tree_shardings(mesh, pspecs)
+        inputs = specs_mod.input_specs(c, shape)
+        if shape.kind == "train":
+            opt_t = specs_mod.opt_specs(params_t)
+            oshard = shard_mod.tree_shardings(
+                mesh, shard_mod.opt_shardings(pspecs, opt_t))
+            bshard = shard_mod.tree_shardings(
+                mesh, shard_mod.tree_specs(inputs["batch"],
+                                           rules.batch_spec))
+            fn = step_mod.make_train_step(c, adamw.OptimizerConfig(),
+                                          microbatches=microbatches,
+                                          unroll_accum=unroll_accum)
+            jf = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+            return jf.lower(params_t, opt_t, inputs["batch"]), pspecs
+        if shape.kind == "prefill":
+            bshard = shard_mod.tree_shardings(
+                mesh, shard_mod.tree_specs(inputs["batch"],
+                                           rules.batch_spec))
+            fn = step_mod.make_prefill(c)
+            jf = jax.jit(fn, in_shardings=(pshard, bshard))
+            return jf.lower(params_t, inputs["batch"]), pspecs
+        cshard = shard_mod.tree_shardings(
+            mesh, shard_mod.tree_specs(inputs["cache"], rules.cache_spec))
+        bshard_tok = shard_mod.tree_shardings(
+            mesh, shard_mod.tree_specs(inputs["token"], rules.batch_spec))
+        lenshard = shard_mod.tree_shardings(
+            mesh, shard_mod.tree_specs(inputs["cache_len"],
+                                       rules.batch_spec))
+        fn = step_mod.make_serve_step(c)
+        jf = jax.jit(
+            fn,
+            in_shardings=(pshard, bshard_tok, cshard, lenshard, None),
+            out_shardings=(bshard_tok, cshard, None),
+            donate_argnums=(2,))
+        return jf.lower(params_t, inputs["token"], inputs["cache"],
+                        inputs["cache_len"], inputs["rng"]), pspecs
+
+    # analysis twins: unrolled 1- and 2-super stacks (identical per-layer
+    # math, Python layer loop, single-chunk attention); per-super costs
+    # extrapolate linearly — see extrapolate_costs.
+    pat, ns, tail = layer_plan(cfg)
+    an_chunk = max(cfg.attn_chunk, shape.seq_len)
+    cfg1 = dataclasses.replace(cfg, unroll=True, attn_chunk=an_chunk,
+                               num_layers=len(pat) + len(tail))
+    cfg2 = dataclasses.replace(cfg, unroll=True, attn_chunk=an_chunk,
+                               num_layers=2 * len(pat) + len(tail))
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered, pspecs = build(cfg)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        t0 = time.time()
+        try:
+            c1 = _costs_of(build(cfg1)[0].compile())
+            c2 = _costs_of(build(cfg2)[0].compile())
+            costs = extrapolate_costs(c1, c2, ns)
+            if microbatches > 1:
+                # the microbatch scan body (one microbatch, all layers) is
+                # counted once — identical microbatches scale linearly; the
+                # optimizer-update tail is over-scaled by the same factor
+                # (small vs per-microbatch work, noted in EXPERIMENTS.md).
+                costs = {k: v * microbatches for k, v in costs.items()}
+            record["cost_source"] = "unrolled-extrapolated"
+        except Exception as e:  # noqa: BLE001 — fall back to scan costs
+            costs = _costs_of(compiled)
+            record["cost_source"] = "scan(undercounted)"
+            record["analysis_error"] = repr(e)[:300]
+        t_analysis = time.time() - t0
+
+    record["memory"] = analyze_memory(compiled)
+    record["cost"] = {
+        "flops_per_device": costs["flops"],
+        "bytes_accessed_per_device": costs["bytes"],
+        "transcendentals": costs["transcendentals"],
+    }
+    record["collectives_per_device_bytes"] = {
+        k.split("/", 1)[1]: v for k, v in costs.items()
+        if k.startswith("coll/")}
+    record["status"] = "ok"
+    record["lower_seconds"] = round(t_lower, 2)
+    record["compile_seconds"] = round(t_compile, 2)
+    record["analysis_compile_seconds"] = round(t_analysis, 2)
+    record["param_spec_sample"] = {
+        "embed": str(jax.tree.leaves(
+            jax.tree.map(str, spec_tree_to_json(pspecs)))[0]),
+    }
+    # GQA fallback visibility
+    record["kv_shard"] = ("heads" if cfg.kv_heads % 16 == 0 else "head_dim")
+    return record
+
+
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residuals (§Perf lever)")
+    ap.add_argument("--unroll-accum", action="store_true",
+                    help="Python-loop microbatch accumulation (partitioner "
+                         "workaround for vocab-fallback archs)")
+    ap.add_argument("--suffix", default="",
+                    help="output-file suffix for hillclimb variants")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from ..configs import ARCH_IDS
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = ALL_SHAPES if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                cell = f"{arch}__{shape}__{mesh_kind}{args.suffix}"
+                path = os.path.join(args.out, cell + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[skip-cached] {cell}")
+                            continue
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape, mesh_kind,
+                                   microbatches=args.microbatches,
+                                   out_dir=args.out,
+                                   seq_shard=args.seq_shard,
+                                   unroll_accum=args.unroll_accum)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                rec["variant"] = args.suffix.lstrip("_") or "baseline"
+                rec["wall_seconds"] = round(time.time() - t0, 2)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2, default=float)
+                print(f"[{rec['status']:7s}] {cell} "
+                      f"({rec['wall_seconds']}s)", flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction (dry-run target: TPU v5e pods).
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """(16, 16) data×model single pod; (2, 16, 16) pod×data×model for 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (CPU tests / single host)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+HARDWARE = {
+    # TPU v5e per chip
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bandwidth": 819e9,      # B/s
+    "ici_bandwidth": 50e9,       # B/s per link
+    "hbm_bytes": 16e9,
+}

@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell — the dry-run
+never allocates real arrays (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import transformer
+from ..optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Model inputs for the given cell (train batch / prefill batch /
+    decode state)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": SDS((B, S), jnp.int32),
+                 "labels": SDS((B, S), jnp.int32)}
+        if cfg.frontend != "none":
+            batch["prefix_emb"] = SDS((B, cfg.frontend_len, cfg.d_model),
+                                      dtype)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, B, S, dtype=dtype))
+    return {
+        "token": SDS((B,), jnp.int32),
+        "cache": cache,
+        "cache_len": SDS((B,), jnp.int32),
+        "rng": SDS((2,), jnp.uint32),
+    }
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0),
+                                        dtype=dtype))
+
+
+def opt_specs(params_template):
+    return jax.eval_shape(adamw.init, params_template)

@@ -1,0 +1,3 @@
+from . import attention, layers, moe, rglru, ssm, transformer
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          layer_plan, loss_fn, prefill)

@@ -1,0 +1,144 @@
+"""GQA attention — XLA path (q-chunked, shard-friendly) + Pallas path.
+
+The XLA path is what the multi-pod dry-run lowers: a lax.scan over query
+chunks keeps the logits working set to (B, H, chunk, L) so long-context
+prefill fits HBM (§Perf lever `attn_chunk`).  The Pallas flash kernel is
+the TPU-target hot path, validated in interpret mode; both are numerically
+interchangeable (tests/test_models.py asserts parity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops as kops
+from .layers import apply_rope, init_dense
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], (d, h * hd), dtype=dtype),
+        "wk": init_dense(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": init_dense(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": init_dense(ks[3], (h * hd, d), dtype=dtype),
+    }
+
+
+def _xla_attention(q, k, v, *, causal: bool, window: Optional[int],
+                   q_chunk: int, q_offset: int = 0) -> jnp.ndarray:
+    """q (B, Lq, H, D); k/v (B, Lk, Hkv, D).  Chunked over Lq.
+
+    KV is repeated to the full head count *after* a head-sharding
+    constraint, so each model shard materializes only its own heads'
+    replicas (bytes: B·L·(H/tp)·hd — small) and the (B, H, qc, Lk) logits
+    tensor shards over heads (sequence-parallel fallback when H doesn't
+    divide; see distributed/constraints.py).  Without these constraints
+    GSPMD replicates the logits — measured +100 GB/device on train_4k.
+    """
+    from ..distributed import constraints as con
+
+    B, Lq, H, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    group = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qc = min(q_chunk, Lq)
+    if Lq % qc != 0:
+        qc = Lq
+    nq = Lq // qc
+    q = con.constrain(q, con.act_heads)
+    kq = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vq = jnp.repeat(v, group, axis=2) if group > 1 else v
+    kq = con.constrain(kq, con.act_heads)
+    vq = con.constrain(vq, con.act_heads)
+    qr = q.reshape(B, nq, qc, H, D)
+    ki = jnp.arange(Lk)
+
+    def chunk(ci):
+        qi = qr[:, ci]                                      # (B, qc, H, D)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi, kq).astype(jnp.float32)
+        logits = con.constrain(logits, con.logits_bhqk) * scale
+        rows = ci * qc + jnp.arange(qc) + q_offset
+        if causal:
+            mask = rows[:, None] >= ki[None, :]
+            if window:
+                mask &= (rows[:, None] - ki[None, :]) < window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vq.dtype), vq)
+        return con.constrain(o, con.act_heads)
+
+    out = jax.lax.map(chunk, jnp.arange(nq))                # (nq, B, qc, H, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Lq, H, D)
+    return con.constrain(out, con.act_heads)
+
+
+def attention(params, x, cfg: ArchConfig, positions, *, impl: str = "xla",
+              window: Optional[int] = None, kv_cache=None,
+              cache_len=None, valid_len=None):
+    """Self-attention over x (B, L, D).
+
+    Training/prefill: kv_cache None -> returns (out, (k, v)) so prefill can
+    seed the cache.  Decode: x is (B, 1, D), kv_cache=(k, v) with static S,
+    cache_len (B,) insertion slots; ``valid_len`` (B,) optionally overrides
+    the number of valid cache entries (ring buffers for windowed attention:
+    the cache *is* the window, so all min(pos+1, S) entries are live and no
+    extra window mask applies — entry positions were RoPE'd at insert).
+    Returns (out, (k, v) updated).
+    """
+    from ..distributed import constraints as con
+
+    B, L, D = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+    q = con.constrain(jnp.einsum("bld,de->ble", x, params["wq"]),
+                      con.act_bsf).reshape(B, L, h, hd)
+    k = con.constrain(jnp.einsum("bld,de->ble", x, params["wk"]),
+                      con.act_bsf).reshape(B, L, hkv, hd)
+    v = con.constrain(jnp.einsum("bld,de->ble", x, params["wv"]),
+                      con.act_bsf).reshape(B, L, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    win = window if window else (cfg.attn_window or None)
+    if kv_cache is None:
+        if impl == "flash":
+            out = kops.flash_attention(q, k, v, causal=True, window=win)
+        else:
+            out = _xla_attention(q, k, v, causal=True, window=win,
+                                 q_chunk=cfg.attn_chunk)
+        new_cache = (k, v)
+    else:
+        ck, cv = kv_cache                                   # (B, S, Hkv, hd)
+        S = ck.shape[1]
+        pos_idx = cache_len                                  # (B,) insert slot
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, pos_idx].set(k[:, 0])
+        cv = cv.at[bidx, pos_idx].set(v[:, 0])
+        lengths = (cache_len + 1) if valid_len is None else valid_len
+        if impl == "flash":
+            out = kops.decode_attention(q[:, 0], ck, cv, lengths)[:, None]
+        else:
+            scale = 1.0 / (hd ** 0.5)
+            group = h // hkv
+            qg = q[:, 0].reshape(B, hkv, group, hd)
+            logits = jnp.einsum("bhgd,bshd->bhgs", qg, ck).astype(jnp.float32)
+            logits *= scale
+            sidx = jnp.arange(S)
+            mask = sidx[None, :] < lengths[:, None]
+            logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bhgs,bshd->bhgd", p.astype(cv.dtype), cv)
+            out = out.reshape(B, 1, h, hd)
+        new_cache = (ck, cv)
+
+    Lo = out.shape[1]
+    out = jnp.einsum("ble,ed->bld", out.reshape(B, Lo, h * hd), params["wo"])
+    out = con.constrain(out, con.act_bsd)
+    return out, new_cache

@@ -1,0 +1,72 @@
+"""Shared neural building blocks (pure-JAX, shard-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (..., L, H, D) with positions (..., L)."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., L, D/2)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., L, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    from ..distributed import constraints as con
+
+    def proj_spec(rules, shape):
+        # (..., F): features over model, batch (leading dim) over dp
+        lead = rules.dp(shape[0]) if len(shape) >= 2 else None
+        mids = (None,) * max(len(shape) - 2, 0)
+        return con.P(lead, *mids, rules.tp(shape[-1]))
+
+    g = con.constrain(jnp.einsum("...d,df->...f", x, w_gate), proj_spec)
+    u = con.constrain(jnp.einsum("...d,df->...f", x, w_up), proj_spec)
+    out = jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+    def out_spec(rules, shape):
+        lead = rules.dp(shape[0]) if len(shape) >= 2 else None
+        return con.P(lead, *((None,) * (len(shape) - 1)))
+
+    return con.constrain(out, out_spec)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x (B, L, C); w (C, W)."""
+    W = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    stacked = jnp.stack([xp[:, i:i + x.shape[1]] for i in range(W)], axis=-1)
+    return jnp.einsum("blcw,cw->blc", stacked, w)
+
+
+def causal_conv1d_step(x_t: jnp.ndarray, conv_state: jnp.ndarray,
+                       w: jnp.ndarray):
+    """One decode step.  x_t (B, C); conv_state (B, W-1, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,cw->bc", window, w)
+    return y, window[:, 1:]
+
+
+def init_dense(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0]
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

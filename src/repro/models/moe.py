@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with capacity-bounded gather dispatch.
+
+Dispatch strategy (TPU-native, EP-shardable): tokens are routed top-k, then
+each expert gathers up to C = ceil(tokens·top_k/E · capacity_factor) token
+slots (deterministic position-in-expert ranking via cumsum — the standard
+capacity formulation).  Expert weights are stacked (E, ...) so the expert
+dimension shards over the `model`/`expert` mesh axis; the gather/combine
+pair lowers to all-to-all under SPMD (visible in the dry-run collective
+dump).  Overflowed tokens fall through with zero update (residual carries
+them), the usual capacity-dropping semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import init_dense
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_dense(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": init_dense(ks[1], (e, d, f), dtype=dtype),
+        "w_up": init_dense(ks[2], (e, d, f), dtype=dtype),
+        "w_down": init_dense(ks[3], (e, f, d), dtype=dtype),
+    }
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: ArchConfig, decode: bool = False):
+    """x (B, L, D) -> (B, L, D), plus aux losses dict.
+
+    decode=True switches to the exact per-token expert gather (no capacity):
+    decode batches are small, so gathering K expert weight slices per token
+    is cheap and removes the batch-dependent capacity-drop nondeterminism.
+    """
+    B, L, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * L
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    if decode:
+        wg = params["w_gate"][expert_ids]                    # (T, K, D, F)
+        wu = params["w_up"][expert_ids]
+        wd = params["w_down"][expert_ids]
+        g = jnp.einsum("td,tkdf->tkf", xt, wg)
+        u = jnp.einsum("td,tkdf->tkf", xt, wu)
+        y = jnp.einsum("tkf,tkfd->tkd", jax.nn.silu(g) * u, wd)
+        out = (y * gate_vals[..., None]).sum(axis=1)
+        me = probs.mean(axis=0)
+        ce = jax.nn.one_hot(expert_ids[:, 0], E).mean(axis=0)
+        aux = {"moe_balance": (E * (me * ce).sum()).astype(jnp.float32)}
+        return out.reshape(B, L, D).astype(x.dtype), aux
+
+    cap = int(max(1, round(T * K / E * cfg.capacity_factor)))
+
+    # position of each (token, k) within its expert queue — sort-based
+    # ranking.  The textbook one-hot cumsum builds a (T·K, E) tensor and a
+    # full-length prefix scan; measured on qwen3 (T=1M, K=8, E=128) it
+    # dominated the layer's HLO flops by >100×.  Sorting the T·K expert
+    # keys and ranking within runs is O(T·K log) and SPMD-friendly
+    # (§Perf iteration 6).
+    e_flat_all = expert_ids.reshape(-1)                        # (T*K,)
+    order = jnp.argsort(e_flat_all, stable=True)
+    sorted_e = e_flat_all[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))      # (E,)
+    rank_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    pos = jnp.zeros(T * K, jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32)).reshape(T, K)
+    keep = pos < cap
+
+    # scatter token ids into (E, cap) slots
+    slot_tok = jnp.zeros((E, cap), dtype=jnp.int32)
+    slot_gate = jnp.zeros((E, cap), dtype=jnp.float32)
+    slot_valid = jnp.zeros((E, cap), dtype=jnp.bool_)
+    e_flat = expert_ids.reshape(-1)
+    k_keep = keep.reshape(-1)
+    tok_ids = jnp.repeat(jnp.arange(T), K)
+    # overflowed (token,k) pairs get position == cap, an out-of-bounds index
+    # that mode="drop" discards — capacity dropping in one scatter.
+    p_idx = jnp.where(k_keep, pos.reshape(-1), cap)
+    slot_tok = slot_tok.at[e_flat, p_idx].set(tok_ids, mode="drop")
+    slot_gate = slot_gate.at[e_flat, p_idx].set(gate_vals.reshape(-1),
+                                                mode="drop")
+    slot_valid = slot_valid.at[e_flat, p_idx].set(True, mode="drop")
+
+    from ..distributed import constraints as con
+
+    xe = con.constrain(xt[slot_tok], con.moe_slots)           # (E, cap, D)
+    g = con.constrain(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]),
+                      con.moe_slots)
+    u = con.constrain(jnp.einsum("ecd,edf->ecf", xe, params["w_up"]),
+                      con.moe_slots)
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"])
+    ye = con.constrain(ye * slot_gate[..., None] * slot_valid[..., None],
+                       con.moe_slots)
+
+    out = jnp.zeros((T, D), dtype=ye.dtype).at[slot_tok.reshape(-1)].add(
+        ye.reshape(-1, D))
+    out = con.constrain(out, lambda r, s: con.P(r.dp(s[0]), None))
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jax.nn.one_hot(expert_ids[:, 0], E).mean(axis=0)
+    aux = {"moe_balance": (E * (me * ce).sum()).astype(jnp.float32)}
+    return out.reshape(B, L, D).astype(x.dtype), aux

@@ -1,0 +1,86 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence: h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t), with
+a_t = exp(−c·softplus(Λ)·σ(r_t)).  First-order linear ⇒ implemented with
+``jax.lax.associative_scan`` (log-depth on TPU, shardable along batch /
+width).  The block wraps the RG-LRU with the Griffin recipe: linear in,
+depthwise causal conv, gated output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import causal_conv1d, causal_conv1d_step, init_dense
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 5)
+    return {
+        "w_x": init_dense(ks[0], (d, w), dtype=dtype),
+        "w_gate_out": init_dense(ks[1], (d, w), dtype=dtype),
+        "w_out": init_dense(ks[2], (w, d), dtype=dtype),
+        "conv_w": init_dense(ks[3], (w, cfg.conv_width), scale=0.5, dtype=dtype),
+        # per-channel recurrence params
+        "lam": jnp.full((w,), 4.0, jnp.float32),   # softplus(4) ≈ 4.02
+        "w_in_gate": init_dense(ks[4], (w, w), dtype=dtype),
+        "w_rec_gate": init_dense(jax.random.fold_in(key, 7), (w, w), dtype=dtype),
+    }
+
+
+def _gates(params, x):
+    i_t = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, params["w_in_gate"]))
+    r_t = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, params["w_rec_gate"]))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return i_t, a, mult
+
+
+def rglru_forward(params, x: jnp.ndarray, cfg: ArchConfig):
+    """x (B, L, D) -> (B, L, D)."""
+    from ..distributed import constraints as con
+
+    xb = con.constrain(jnp.einsum("bld,dw->blw", x, params["w_x"]),
+                       con.act_bsf)
+    xb = causal_conv1d(xb, params["conv_w"])
+    i_t, a, mult = _gates(params, xb)
+    v = (mult * (i_t * xb).astype(jnp.float32))                   # (B,L,W)
+
+    # associative scan over first-order recurrence h = a*h_prev + v
+    def combine(c1, c2):
+        a1, v1 = c1
+        a2, v2 = c2
+        return a1 * a2, v1 * a2 + v2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, v), axis=1)
+    del a_s
+    gate = jax.nn.gelu(con.constrain(
+        jnp.einsum("bld,dw->blw", x, params["w_gate_out"]), con.act_bsf))
+    out = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("blw,wd->bld", out, params["w_out"])
+    return con.constrain(out, con.act_bsd)
+
+
+def rglru_decode_step(params, x_t: jnp.ndarray, state, cfg: ArchConfig):
+    """x_t (B, D); state = (conv_state, h (B, W))."""
+    conv_state, h = state
+    xb = jnp.einsum("bd,dw->bw", x_t, params["w_x"])
+    xb, conv_state = causal_conv1d_step(xb, conv_state, params["conv_w"])
+    i_t, a, mult = _gates(params, xb)
+    h = a * h + mult * (i_t * xb).astype(jnp.float32)
+    gate = jax.nn.gelu(jnp.einsum("bd,dw->bw", x_t, params["w_gate_out"]))
+    out = (h.astype(x_t.dtype) * gate)
+    return jnp.einsum("bw,wd->bd", out, params["w_out"]), (conv_state, h)
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    w = cfg.rnn_width or cfg.d_model
+    conv = jnp.zeros((batch, cfg.conv_width - 1, w), dtype)
+    h = jnp.zeros((batch, w), jnp.float32)
+    return (conv, h)

@@ -1,0 +1,150 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm, the TPU-friendly form: the sequence is split into
+chunks of ``ssm_chunk``; within a chunk the output is a masked quadratic
+(attention-like) term that runs on the MXU, and chunk-to-chunk interaction
+is a first-order recurrence over per-chunk states (lax.scan over the
+*chunk* axis — k/chunk steps instead of k, so the sequential depth is tiny
+even at 500k tokens, which is exactly why this arch runs long_500k).
+
+Decode is the O(1) recurrent form: h ← dA·h + dt·B·x, y = C·h + D·x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import causal_conv1d, causal_conv1d_step, init_dense, rms_norm
+
+
+def init_ssm(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    return {
+        # projections: [z (gate) | x | B | C | dt]
+        "in_proj": init_dense(ks[0], (d, 2 * di + 2 * ns + nh), dtype=dtype),
+        "out_proj": init_dense(ks[1], (di, d), dtype=dtype),
+        "conv_w": init_dense(ks[2], (di + 2 * ns, cfg.conv_width),
+                             scale=0.5, dtype=dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(A_log) in (-1,0)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * ns]
+    dt = proj[..., di + di + 2 * ns:]
+    return z, xbc, dt
+
+
+def ssd_forward(params, x: jnp.ndarray, cfg: ArchConfig):
+    """x (B, L, D) -> (B, L, D).  L must be a multiple of ssm_chunk."""
+    Bsz, L, _ = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = cfg.ssm_chunk
+    Lp = ((L + Q - 1) // Q) * Q
+    if Lp != L:
+        # causal: zero-padding the tail never affects earlier outputs
+        x = jnp.pad(x, ((0, 0), (0, Lp - L), (0, 0)))
+    out = _ssd_forward_aligned(params, x, cfg)
+    return out[:, :L]
+
+
+def _ssd_forward_aligned(params, x: jnp.ndarray, cfg: ArchConfig):
+    Bsz, L, _ = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = cfg.ssm_chunk
+    nc = L // Q
+
+    from ..distributed import constraints as con
+
+    proj = con.constrain(jnp.einsum("bld,de->ble", x, params["in_proj"]),
+                         con.act_bsf)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = causal_conv1d(xbc, params["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(Bsz, L, nh, hd)
+    Bv = xbc[..., di:di + ns]                       # (B, L, N)
+    Cv = xbc[..., di + ns:]                         # (B, L, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(params["A_log"])                   # (H,)
+    dA = dt * A                                     # (B, L, H) log-decay
+
+    # --- chunked SSD ---
+    xs_c = xs.reshape(Bsz, nc, Q, nh, hd)
+    B_c = Bv.reshape(Bsz, nc, Q, ns)
+    C_c = Cv.reshape(Bsz, nc, Q, ns)
+    dA_c = dA.reshape(Bsz, nc, Q, nh)
+    dt_c = dt.reshape(Bsz, nc, Q, nh)
+
+    seg = jnp.cumsum(dA_c, axis=2)                  # (B, nc, Q, H) running log-decay
+    # intra-chunk quadratic term: y_intra[t] = Σ_{s<=t} C_t·B_s exp(seg_t-seg_s) dt_s x_s
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (B,nc,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    gmat = jnp.where(tri[None, None, :, :, None], jnp.exp(decay), 0.0)
+    gmat = con.constrain(gmat, con.ssd_intra)  # heads over model: the (Q,Q,H)
+    cb = jnp.einsum("bctn,bcsn->bcts", C_c, B_c)               # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcts,bctsh,bcsh,bcshp->bcthp",
+                         cb, gmat, dt_c, xs_c)
+
+    # per-chunk final state: S_c = Σ_s exp(seg_Q - seg_s) dt_s B_s ⊗ x_s
+    tail = seg[:, :, -1:, :] - seg                              # (B,nc,Q,H)
+    st = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchnp",
+                    jnp.exp(tail), dt_c, B_c, xs_c)             # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                     # (B,nc,H)
+
+    # inter-chunk recurrence over chunk states
+    def scan_fn(h, inp):
+        s_c, dec = inp                                          # (B,H,N,P),(B,H)
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    init = jnp.zeros((Bsz, nh, ns, hd), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                         # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_inter[t] = C_t · exp(seg_t) · h_prev(chunk)
+    y_inter = jnp.einsum("bctn,bcth,bchnp->bcthp",
+                         C_c, jnp.exp(seg), h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, L, nh, hd)
+    y = y + xs * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return con.constrain(out, con.act_bsd)
+
+
+def ssd_decode_step(params, x_t: jnp.ndarray, state, cfg: ArchConfig):
+    """x_t (B, D); state = (conv_state (B, W-1, C), h (B, H, N, P))."""
+    conv_state, h = state
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bd,de->be", x_t, params["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = causal_conv1d_step(xbc, conv_state, params["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(-1, nh, hd)
+    Bv = xbc[..., di:di + ns]
+    Cv = xbc[..., di + ns:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    dA = jnp.exp(dt * (-jnp.exp(params["A_log"])))                    # (B,H)
+    h = h * dA[..., None, None] + jnp.einsum("bh,bn,bhp->bhnp", dt, Bv, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h) + xs * params["D"][None, :, None]
+    y = y.reshape(-1, di).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.einsum("be,ed->bd", y, params["out_proj"]), (conv_state, h)
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, ns = cfg.d_inner, cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ns), dtype)
+    h = jnp.zeros((batch, cfg.ssm_heads, ns, cfg.ssm_head_dim), jnp.float32)
+    return (conv, h)

@@ -1,0 +1,439 @@
+"""Unified decoder assembly for all assigned families.
+
+One params schema + three entry points (`forward` for train, `prefill`,
+`decode_step`) covering dense / moe / ssm / hybrid / vlm / audio.  Layers
+are *stacked pytrees* consumed by ``lax.scan`` so the HLO holds one layer
+body regardless of depth (essential for 88-layer dry-runs), with
+``jax.checkpoint`` around the body when cfg.remat (save only layer
+boundaries).  Heterogeneous stacks (llama4's moe-every-2, RecurrentGemma's
+rec/rec/attn pattern) scan over *super-blocks* — the smallest repeating
+group — plus an explicit tail for non-divisible depths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import init_dense, rms_norm, swiglu
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, d, f, dtype):
+    ks = jax.random.split(key, 3)
+    return {"w_gate": init_dense(ks[0], (d, f), dtype=dtype),
+            "w_up": init_dense(ks[1], (d, f), dtype=dtype),
+            "w_down": init_dense(ks[2], (f, d), dtype=dtype)}
+
+
+def _init_block(key, cfg: ArchConfig, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    blk = {"ln1": jnp.zeros((d,), dtype)}
+    if kind == "attn":
+        blk["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    elif kind == "rec":
+        blk["rec"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        blk["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+        return blk  # mamba2 blocks have no separate MLP
+    if kind in ("attn", "rec"):
+        blk["ln2"] = jnp.zeros((d,), dtype)
+        if cfg.family == "moe" and kind == "attn_moe":
+            pass
+        blk["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, dtype)
+    return blk
+
+
+def _init_moe_block(key, cfg: ArchConfig, dtype, use_moe: bool):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    blk = {"ln1": jnp.zeros((d,), dtype),
+           "attn": attn_mod.init_attention(ks[0], cfg, dtype),
+           "ln2": jnp.zeros((d,), dtype)}
+    if use_moe:
+        blk["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        blk["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, dtype)
+    return blk
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def layer_plan(cfg: ArchConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(super_pattern, num_supers, tail_pattern) for the scan layout."""
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return ("ssm",), L, ()
+    if cfg.family == "hybrid":
+        pat = cfg.pattern or ("rec", "rec", "attn")
+        ns = L // len(pat)
+        tail = tuple(pat[: L - ns * len(pat)])
+        return pat, ns, tail
+    if cfg.family == "moe":
+        pat = tuple("moe" if i == 0 else "dense" for i in range(cfg.moe_every))
+        ns = L // len(pat)
+        tail = tuple(pat[: L - ns * len(pat)])
+        return pat, ns, tail
+    return ("attn",), L, ()
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    d, v = cfg.d_model, cfg.vocab
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params: Params = {
+        "embed": init_dense(keys[0], (v, d), scale=0.02, dtype=dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(keys[1], (d, v), dtype=dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = init_dense(keys[2], (d, d), dtype=dtype)
+
+    pat, ns, tail = layer_plan(cfg)
+
+    def make(kind, key):
+        if kind == "moe":
+            return _init_moe_block(key, cfg, dtype, use_moe=True)
+        if kind == "dense":
+            return _init_moe_block(key, cfg, dtype, use_moe=False)
+        return _init_block(key, cfg, kind, dtype)
+
+    li = 0
+    supers = []
+    for si in range(ns):
+        sup = {}
+        for j, kind in enumerate(pat):
+            sup[f"b{j}_{kind}"] = make(kind, keys[3 + li])
+            li += 1
+        supers.append(sup)
+    params["supers"] = _stack(supers)
+    if tail:
+        tail_blk = {}
+        for j, kind in enumerate(tail):
+            tail_blk[f"b{j}_{kind}"] = make(kind, keys[3 + li])
+            li += 1
+        params["tail"] = tail_blk
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(blk, name: str, x, cfg: ArchConfig, positions, aux):
+    from ..distributed import constraints as con
+
+    kind = name.split("_", 1)[1]
+    if cfg.seq_shard_activations:
+        x = con.constrain(x, con.act_bsd_sp)
+    h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+    if kind in ("attn", "moe", "dense"):
+        window = cfg.attn_window or None
+        o, _ = attn_mod.attention(blk["attn"], h, cfg, positions,
+                                  window=window)
+        x = x + o
+        h2 = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, a = moe_mod.moe_ffn(blk["moe"], h2, cfg)
+            aux = {**aux, "moe_balance": aux.get("moe_balance", 0.0)
+                   + a["moe_balance"]}
+        else:
+            o2 = swiglu(h2, **blk["mlp"])
+        x = x + o2
+    elif kind == "rec":
+        o = rglru_mod.rglru_forward(blk["rec"], h, cfg)
+        x = x + o
+        h2 = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, **blk["mlp"])
+    elif kind == "ssm":
+        o = ssm_mod.ssd_forward(blk["ssm"], h, cfg)
+        x = x + o
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _embed(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    from ..distributed import constraints as con
+
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.frontend != "none" and "prefix_emb" in batch:
+        pre = jnp.einsum("bpd,de->bpe", batch["prefix_emb"],
+                         params["frontend_proj"]).astype(x.dtype)
+        P = pre.shape[1]
+        x = jnp.concatenate([pre, x[:, P:]], axis=1)
+    if x.ndim == 3:
+        x = con.constrain(x, con.act_bsd)
+    return x
+
+
+def forward_hidden(params: Params, cfg: ArchConfig,
+                   batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Backbone only: batch["tokens"] (B, S) -> final hidden (B, S, D)."""
+    x = _embed(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux: Dict[str, jnp.ndarray] = {}
+    pat, ns, tail = layer_plan(cfg)
+
+    def body(carry, sup):
+        h, aux_moe = carry
+        a = {"moe_balance": aux_moe}
+        for j, kind in enumerate(pat):
+            h, a = _apply_block(sup[f"b{j}_{kind}"], f"b_{kind}", h, cfg,
+                                positions, a)
+        return (h, a.get("moe_balance", aux_moe)), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    if cfg.unroll:
+        # analysis lowering: identical math, layer loop in Python so XLA
+        # cost analysis counts every layer (while bodies count once).
+        carry = (x, jnp.float32(0.0))
+        for i in range(ns):
+            sup = jax.tree.map(lambda v: v[i], params["supers"])
+            carry, _ = scan_body(carry, sup)
+        x, moe_bal = carry
+    else:
+        (x, moe_bal), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)),
+                                       params["supers"])
+    if tail:
+        a = {"moe_balance": moe_bal}
+        for j, kind in enumerate(tail):
+            x, a = _apply_block(params["tail"][f"b{j}_{kind}"], f"b_{kind}",
+                                x, cfg, positions, a)
+        moe_bal = a.get("moe_balance", moe_bal)
+    aux["moe_balance"] = moe_bal
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Training/prefill forward.  batch["tokens"] (B, S) -> logits (B, S, V)."""
+    x, aux = forward_hidden(params, cfg, batch)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Vocab-parallel cross entropy.
+
+    CE = logsumexp_v(logits) − logit[label].  logsumexp reduces *over* the
+    (model-sharded) vocab axis — cheap psums — and the label logit is
+    recovered as ⟨hidden, head_row(label)⟩, an embedding-style row gather
+    that never materializes a vocab-replicated (B, S, V) tensor.  Without
+    this, take_along_axis over a sharded V forces XLA to all-gather the full
+    logits (measured: +100 GB temp on llama3.2-1b train_4k — see
+    EXPERIMENTS.md §Perf).
+    """
+    from ..distributed import constraints as con
+
+    x, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+
+    xs = con.constrain(x[:, :-1].astype(jnp.float32), con.act_bsd)
+    logits = jnp.einsum("bsd,dv->bsv", xs, head.astype(jnp.float32))
+    logits = con.constrain(logits, con.logits_bsv)
+    lse = jax.nn.logsumexp(logits, axis=-1)                  # (B, S-1)
+
+    safe = jnp.maximum(labels[:, 1:], 0)
+    rows = con.constrain(head.T[safe].astype(jnp.float32), con.act_bsd)
+    lbl_logit = jnp.einsum("bsd,bsd->bs", xs, rows)
+
+    mask = (labels[:, 1:] >= 0).astype(jnp.float32)
+    loss = ((lse - lbl_logit) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux["moe_balance"] / max(cfg.num_layers, 1)
+    metrics = {"loss": loss, "tokens": mask.sum()}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _kind_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "moe", "dense"):
+        hkv, hd = cfg.kv_heads, cfg.hd
+        S = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+        return (jnp.zeros((batch, S, hkv, hd), dtype),
+                jnp.zeros((batch, S, hkv, hd), dtype))
+    if kind == "rec":
+        return rglru_mod.init_rglru_state(cfg, batch, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    pat, ns, tail = layer_plan(cfg)
+    one_super = {f"b{j}_{kind}": _kind_cache(cfg, kind, batch, max_len, dtype)
+                 for j, kind in enumerate(pat)}
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (ns,) + x.shape), one_super)
+    cache = {"supers": stacked}
+    if tail:
+        cache["tail"] = {f"b{j}_{kind}": _kind_cache(cfg, kind, batch,
+                                                     max_len, dtype)
+                         for j, kind in enumerate(tail)}
+    return cache
+
+
+def _decode_block(blk, name: str, x_t, cfg: ArchConfig, cache, pos):
+    """x_t (B, D); cache per kind; pos (B,) current length."""
+    kind = name.split("_", 1)[1]
+    h = rms_norm(x_t, blk["ln1"], cfg.norm_eps)
+    if kind in ("attn", "moe", "dense"):
+        window = cfg.attn_window or None
+        if window:
+            S = cache[0].shape[1]
+            slot = pos % S                  # ring buffer: cache == window
+            valid = jnp.minimum(pos + 1, S)
+        else:
+            slot = pos
+            valid = None
+        o, cache = attn_mod.attention(
+            blk["attn"], h[:, None], cfg, pos[:, None], window=window,
+            kv_cache=cache, cache_len=slot, valid_len=valid)
+        o = o[:, 0]
+        x_t = x_t + o
+        h2 = rms_norm(x_t, blk["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, _ = moe_mod.moe_ffn(blk["moe"], h2[:, None], cfg, decode=True)
+            o2 = o2[:, 0]
+        else:
+            o2 = swiglu(h2, **blk["mlp"])
+        x_t = x_t + o2
+    elif kind == "rec":
+        o, cache = rglru_mod.rglru_decode_step(blk["rec"], h, cache, cfg)
+        x_t = x_t + o
+        h2 = rms_norm(x_t, blk["ln2"], cfg.norm_eps)
+        x_t = x_t + swiglu(h2, **blk["mlp"])
+    elif kind == "ssm":
+        o, cache = ssm_mod.ssd_decode_step(blk["ssm"], h, cache, cfg)
+        x_t = x_t + o
+    return x_t, cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
+                cache, cache_len: jnp.ndarray):
+    """One decode step.  token (B,) int32; cache_len (B,) current lengths.
+
+    Returns (logits (B, V), new_cache).
+    """
+    x = params["embed"][token]
+    pat, ns, tail = layer_plan(cfg)
+
+    def body(carry, xs):
+        h = carry
+        sup, ch = xs
+        new_ch = {}
+        for j, kind in enumerate(pat):
+            nm = f"b{j}_{kind}"
+            h, new_ch[nm] = _decode_block(sup[nm], f"b_{kind}", h, cfg,
+                                          ch[nm], cache_len)
+        return h, new_ch
+
+    if cfg.unroll:
+        outs = []
+        for i in range(ns):
+            sup = jax.tree.map(lambda v: v[i], params["supers"])
+            ch = jax.tree.map(lambda v: v[i], cache["supers"])
+            x, nch = body(x, (sup, ch))
+            outs.append(nch)
+        new_supers = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *outs)
+    else:
+        x, new_supers = jax.lax.scan(body, x,
+                                     (params["supers"], cache["supers"]))
+    new_cache = {"supers": new_supers}
+    if tail:
+        new_tail = {}
+        for j, kind in enumerate(tail):
+            nm = f"b{j}_{kind}"
+            x, new_tail[nm] = _decode_block(params["tail"][nm], f"b_{kind}",
+                                            x, cfg, cache["tail"][nm],
+                                            cache_len)
+        new_cache["tail"] = new_tail
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bd,dv->bv", x, head)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            dtype=jnp.float32):
+    """Prefill forward: returns (logits, cache, lengths).
+
+    For attention families the per-layer (k, v) tensors ARE the cache; we
+    re-run the projections per layer inside a scan collecting them (cost
+    identical to forward — the dry-run lowers this for prefill_32k).
+    """
+    x = _embed(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pat, ns, tail = layer_plan(cfg)
+
+    def body(h, sup):
+        caches = {}
+        for j, kind in enumerate(pat):
+            nm = f"b{j}_{kind}"
+            blk = sup[nm]
+            hn = rms_norm(h, blk["ln1"], cfg.norm_eps)
+            if kind in ("attn", "moe", "dense"):
+                window = cfg.attn_window or None
+                o, kv = attn_mod.attention(blk["attn"], hn, cfg, positions,
+                                           window=window)
+                caches[nm] = kv
+                h = h + o
+                h2 = rms_norm(h, blk["ln2"], cfg.norm_eps)
+                if kind == "moe":
+                    o2, _ = moe_mod.moe_ffn(blk["moe"], h2, cfg)
+                else:
+                    o2 = swiglu(h2, **blk["mlp"])
+                h = h + o2
+            elif kind == "rec":
+                o = rglru_mod.rglru_forward(blk["rec"], hn, cfg)
+                caches[nm] = None
+                h = h + o
+                h2 = rms_norm(h, blk["ln2"], cfg.norm_eps)
+                h = h + swiglu(h2, **blk["mlp"])
+            elif kind == "ssm":
+                o = ssm_mod.ssd_forward(blk["ssm"], hn, cfg)
+                caches[nm] = None
+                h = h + o
+        return h, caches
+
+    if cfg.unroll:
+        kv_list = []
+        for i in range(ns):
+            sup = jax.tree.map(lambda v: v[i], params["supers"])
+            x, kv = body(x, sup)
+            kv_list.append(kv)
+        kv_stacks = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *kv_list)
+    else:
+        x, kv_stacks = jax.lax.scan(body, x, params["supers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head)
+    lengths = jnp.full((B,), S, jnp.int32)
+    return logits, kv_stacks, lengths

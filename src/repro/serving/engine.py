@@ -1,0 +1,137 @@
+"""Batched serving engine: fixed-slot continuous batching over decode_step.
+
+A minimal-but-real scheduler: B decode slots, a FIFO request queue, slot
+re-fill on completion (continuous batching), per-request max_tokens and
+EOS.  Prefill for attention families seeds the cache via
+transformer.prefill; SSM/hybrid prompts replay through decode_step (their
+prefill-to-state handoff is sequential by construction — see
+transformer.prefill docstring).
+
+This is the serving analogue of the paper's "online scenario" and doubles
+as the harness for decode-shape validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import transformer
+from ..training import step as step_mod
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (L,) int32
+    max_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.step_fn = jax.jit(step_mod.make_serve_step(cfg, temperature))
+        self.cache = transformer.init_cache(cfg, batch_slots, max_len)
+        self.lens = jnp.zeros((batch_slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.rng = jax.random.PRNGKey(seed)
+        self.steps_run = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _reset_slot(self, slot: int) -> None:
+        """Zero a slot's cache + length before re-use (previous occupant's
+        KV/state must not leak into the next request)."""
+        def zero(x):
+            if x.ndim >= 2 and x.shape[1] == self.B:      # (layers, B, ...)
+                return x.at[:, slot].set(0)
+            if x.ndim >= 1 and x.shape[0] == self.B:      # (B, ...)
+                return x.at[slot].set(0)
+            return x
+        self.cache = jax.tree.map(zero, self.cache)
+        self.lens = self.lens.at[slot].set(0)
+
+    def _admit(self) -> None:
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self._reset_slot(i)
+                # replay the prompt through decode steps to build state
+                for tok in req.prompt[:-1]:
+                    self._step_single_slot(i, int(tok))
+                self.cur_tok = self.cur_tok.at[i].set(int(req.prompt[-1]))
+
+    def _step_single_slot(self, slot: int, token: int) -> None:
+        # feed one prompt token for one slot: run a full batched step but
+        # only advance that slot's length (others replay their current
+        # token with unchanged length — a masked no-op for their caches is
+        # not free; production would use per-slot prefill, this keeps the
+        # reference engine simple and exact).
+        toks = self.cur_tok.at[slot].set(token)
+        self.rng, sub = jax.random.split(self.rng)
+        _, cache, _ = self.step_fn(self.params, toks, self.cache, self.lens,
+                                   sub)
+        # commit only the target slot's cache advance
+        def commit(new, old):
+            return jnp.concatenate([old[:slot], new[slot:slot + 1],
+                                    old[slot + 1:]], axis=0) \
+                if new.ndim >= 1 and new.shape[0] == self.B else new
+        # caches are stacked (layers, B, ...) — commit along the B axis
+        def commit_tree(new, old):
+            if new.ndim >= 2 and new.shape[1] == self.B:
+                return jnp.concatenate(
+                    [old[:, :slot], new[:, slot:slot + 1], old[:, slot + 1:]],
+                    axis=1)
+            if new.ndim >= 1 and new.shape[0] == self.B:
+                return commit(new, old)
+            return new
+        self.cache = jax.tree.map(commit_tree, cache, self.cache)
+        self.lens = self.lens.at[slot].add(1)
+
+    def run(self, max_steps: int = 256) -> Dict[int, List[int]]:
+        """Drive until queue and slots drain (or max_steps)."""
+        results: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self._admit()
+            if all(s is None for s in self.slots) and not self.queue:
+                break
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, cache, _ = self.step_fn(self.params, self.cur_tok,
+                                         self.cache, self.lens, sub)
+            self.cache = cache
+            self.lens = self.lens + jnp.array(
+                [1 if s is not None else 0 for s in self.slots], jnp.int32)
+            nxt_np = np.asarray(nxt)
+            self.steps_run += 1
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                tok = int(nxt_np[i])
+                req.output.append(tok)
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.output) >= req.max_tokens or \
+                        int(self.lens[i]) >= self.max_len - 1:
+                    req.done = True
+                    results[req.uid] = req.output
+                    self.slots[i] = None
+                else:
+                    self.cur_tok = self.cur_tok.at[i].set(tok)
+        for req in [s for s in self.slots if s is not None]:
+            results[req.uid] = req.output
+        return results

@@ -1,0 +1,94 @@
+"""Train / serve step factories.
+
+``make_train_step`` builds the jit-able update: loss → grads → AdamW, with
+optional gradient accumulation over microbatches (a lax.scan over batch
+slices — the §Perf memory lever: peak activation memory scales with
+B/microbatches while arithmetic is unchanged).
+
+``make_serve_step`` builds the single-token decode step (greedy or
+temperature sampling) used by the serving engine and the decode dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import transformer
+from ..optim import adamw
+
+
+def make_loss_fn(cfg: ArchConfig):
+    def loss(params, batch):
+        return transformer.loss_fn(params, cfg, batch)
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.OptimizerConfig,
+                    microbatches: int = 1, unroll_accum: bool = False):
+    """unroll_accum: accumulate microbatches in a Python loop instead of
+    lax.scan — works around an XLA SPMD partitioner fault when a D-sharded
+    embedding gather (the vocab∤16 fallback, e.g. mamba2's 50280) is
+    resharded inside a while-loop body (hlo-verifier dynamic-slice error)."""
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def to_mb(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(to_mb, batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            if unroll_accum:
+                carry = (g0, jnp.float32(0.0))
+                for i in range(microbatches):
+                    mb = jax.tree.map(lambda x: x[i], mbs)
+                    carry, _ = acc(carry, mb)
+                gsum, lsum = carry
+            else:
+                (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)),
+                                               mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"loss": loss}
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, temperature: float = 0.0):
+    def serve_step(params, token, cache, cache_len, rng):
+        logits, cache = transformer.decode_step(params, cfg, token, cache,
+                                                cache_len)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache, logits
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return transformer.prefill(params, cfg, batch)
+    return prefill_step

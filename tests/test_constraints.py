@@ -1,0 +1,97 @@
+"""Appendix-E constrained variants vs post-filtered oracle."""
+import numpy as np
+import pytest
+
+from repro.core import PathEnum, build_index, erdos_renyi, oracle
+from repro.core.constraints import (AccumulativeValue, ActionSequence,
+                                    edge_predicate_mask)
+
+
+def edge_weight_map(g, weights):
+    return {(int(a), int(b)): w
+            for a, b, w in zip(g.esrc, g.edst, weights)}
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_accumulative_constraint_matches_postfilter(seed):
+    rng = np.random.default_rng(seed)
+    g = erdos_renyi(40, 4.0, seed=seed + 20)
+    weights = rng.uniform(0.0, 10.0, size=g.m)
+    wmap = edge_weight_map(g, weights)
+    s, t, k = 0, g.n - 1, 5
+    thresh = 18.0
+
+    want = []
+    for p in oracle.enumerate_paths(g, s, t, k):
+        beta = sum(wmap[(a, b)] for a, b in zip(p, p[1:]))
+        if beta >= thresh:
+            want.append(p)
+
+    cons = AccumulativeValue(weights=weights, op=np.add, init=0.0,
+                             accept=lambda b: b >= thresh)
+    eng = PathEnum()
+    got = eng.query(g, s, t, k, mode="dfs", constraint=cons)
+    assert sorted(got.result.as_tuples()) == sorted(want)
+    # join mode applies the same constraint at join time
+    got_j = eng.query(g, s, t, k, mode="join", cut=2, constraint=cons)
+    assert sorted(got_j.result.as_tuples()) == sorted(want)
+
+
+def test_accumulative_monotone_pruning_is_safe():
+    rng = np.random.default_rng(3)
+    g = erdos_renyi(40, 4.0, seed=30)
+    weights = rng.uniform(0.0, 5.0, size=g.m)
+    wmap = edge_weight_map(g, weights)
+    s, t, k = 0, g.n - 1, 5
+    upper = 10.0
+    want = []
+    for p in oracle.enumerate_paths(g, s, t, k):
+        beta = sum(wmap[(a, b)] for a, b in zip(p, p[1:]))
+        if beta <= upper:
+            want.append(p)
+    cons = AccumulativeValue(weights=weights, op=np.add, init=0.0,
+                             accept=lambda b: b <= upper,
+                             monotone_upper=upper)
+    got = PathEnum().query(g, s, t, k, mode="dfs", constraint=cons)
+    assert sorted(got.result.as_tuples()) == sorted(want)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_action_sequence_dfa(seed):
+    rng = np.random.default_rng(seed)
+    g = erdos_renyi(36, 4.0, seed=seed + 50)
+    labels = rng.integers(0, 2, size=g.m)  # two actions: 0, 1
+    lmap = edge_weight_map(g, labels)
+    s, t, k = 0, g.n - 1, 4
+    # DFA: accept label sequences matching 0*1* (all 0s then all 1s)
+    # states: 0 = "in zeros", 1 = "in ones"; A[state][label]
+    A = np.array([[0, 1], [-1, 1]])
+    accepting = np.array([True, True])
+
+    def seq_ok(p):
+        st = 0
+        for a, b in zip(p, p[1:]):
+            lab = int(lmap[(a, b)])
+            st = A[st][lab]
+            if st < 0:
+                return False
+        return accepting[st]
+
+    want = [p for p in oracle.enumerate_paths(g, s, t, k) if seq_ok(p)]
+    cons = ActionSequence(A=A, labels=labels, start=0, accepting=accepting)
+    eng = PathEnum()
+    got = eng.query(g, s, t, k, mode="dfs", constraint=cons)
+    assert sorted(got.result.as_tuples()) == sorted(want)
+    got_j = eng.query(g, s, t, k, mode="join", cut=2, constraint=cons)
+    assert sorted(got_j.result.as_tuples()) == sorted(want)
+
+
+def test_edge_predicate_matches_subgraph_oracle():
+    g = erdos_renyi(40, 4.0, seed=77)
+    pred = lambda u, v: (u + v) % 3 != 0
+    mask = edge_predicate_mask(g, pred)
+    s, t, k = 0, g.n - 1, 5
+    want = oracle.enumerate_paths(g, s, t, k,
+                                  edge_pred=lambda a, b: (a + b) % 3 != 0)
+    got = PathEnum().query(g, s, t, k, mode="dfs", edge_mask=mask)
+    assert sorted(got.result.as_tuples()) == sorted(want)

@@ -1,0 +1,219 @@
+"""Distributed runtime tests.
+
+Multi-device behaviour (shard_map engine, compressed all-reduce, sharded
+train step) needs >1 device, so those cases run in a subprocess with
+``--xla_force_host_platform_device_count=8`` — the same pattern the
+dry-run uses, kept out of this process so the rest of the suite sees one
+device.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.distributed.compression import dequantize, quantize
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(body: str) -> str:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        import json
+    """) + textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, timeout=540,
+                         env={**os.environ, "PYTHONPATH": SRC})
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(1000).astype(np.float32) * 3.0
+    q, scale = quantize(x)
+    err = np.abs(dequantize(np.asarray(q), scale) - x).max()
+    assert err <= float(scale) * 0.5 + 1e-6
+    assert q.dtype == np.int8
+
+
+def test_distributed_pathenum_matches_host():
+    out = run_sub("""
+        from repro.core import erdos_renyi, build_index, walk_count_dp
+        from repro.distributed.engine import DistributedPathEnum
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        g = erdos_renyi(60, 4.0, seed=5)
+        k = 4
+        eng = DistributedPathEnum(mesh, g, k)
+        qs = []
+        rng = np.random.default_rng(0)
+        while len(qs) < 8:
+            s, t = rng.integers(0, g.n, 2)
+            if s != t: qs.append((int(s), int(t)))
+        qp, qsx, tot, (ds, dt) = eng.query_batch_stats(np.array(qs))
+        host = []
+        for (s, t) in qs:
+            idx = build_index(g, s, t, k)
+            dp = walk_count_dp(idx)
+            host.append((dp.q_prefix.tolist(), dp.q_suffix.tolist(),
+                         dp.q_total))
+        ok = True
+        for i, (hp, hs, ht) in enumerate(host):
+            ok &= np.allclose(qp[i], hp, rtol=1e-5)
+            ok &= np.allclose(qsx[i], hs, rtol=1e-5)
+            ok &= abs(tot[i] - ht) < 1e-4 * max(1.0, ht)
+        print(json.dumps({"ok": bool(ok)}))
+    """)
+    assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+def test_compressed_psum_close_to_exact():
+    out = run_sub("""
+        from repro.distributed.compression import make_compressed_grad_fn
+        from repro.configs.base import ArchConfig
+        from repro.models import init_params
+        from repro.training.step import make_loss_fn
+        cfg = ArchConfig(name="t", family="dense", num_layers=1, d_model=32,
+                         num_heads=2, kv_heads=1, d_ff=64, vocab=64,
+                         head_dim=16, attn_chunk=8, tie_embeddings=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        loss_fn = make_loss_fn(cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 64)
+        batch = {"tokens": toks, "labels": toks}
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        f = make_compressed_grad_fn(loss_fn, mesh)
+        loss, grads = f(params, batch)
+        # exact reference
+        (l2, _), g2 = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        rel = []
+        for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(g2)):
+            denom = np.abs(np.asarray(b)).max() + 1e-9
+            rel.append(float(np.abs(np.asarray(a) - np.asarray(b)).max()
+                       / denom))
+        print(json.dumps({"loss_close": bool(abs(float(loss) - float(l2))
+                                             < 1e-4),
+                          "max_rel": max(rel)}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["loss_close"]
+    assert rec["max_rel"] < 0.05  # int8 grid: ~1/127 per-tensor
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    out = run_sub("""
+        from repro.configs.base import ArchConfig
+        from repro.models import init_params
+        from repro.optim import adamw
+        from repro.training.step import make_train_step
+        from repro.distributed import sharding as S
+        cfg = ArchConfig(name="t", family="dense", num_layers=2, d_model=64,
+                         num_heads=4, kv_heads=2, d_ff=128, vocab=128,
+                         head_dim=16, attn_chunk=16)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        ocfg = adamw.OptimizerConfig(total_steps=5)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 128)
+        batch = {"tokens": toks, "labels": toks}
+        ts = make_train_step(cfg, ocfg)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rules = S.ShardingRules(mesh)
+        pspecs = S.tree_specs(params, rules.param_spec)
+        psh = S.tree_shardings(mesh, pspecs)
+        osh = S.tree_shardings(mesh, S.opt_shardings(pspecs, opt))
+        bsh = S.tree_shardings(mesh, S.tree_specs(batch, rules.batch_spec))
+        with jax.set_mesh(mesh):
+            jf = jax.jit(ts, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None))
+            p1, o1, m1 = jf(params, opt, batch)
+        p2, o2, m2 = jax.jit(ts)(params, opt, batch)
+        diffs = [float(np.abs(np.asarray(a, np.float32)
+                              - np.asarray(b, np.float32)).max())
+                 for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+        print(json.dumps({"loss_diff": abs(float(m1["loss"])
+                                           - float(m2["loss"])),
+                          "max_param_diff": max(diffs)}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["loss_diff"] < 1e-4
+    assert rec["max_param_diff"] < 1e-3
+
+
+def test_sharding_rules_divisibility_properties():
+    """Every spec must name axes whose sizes divide the dim they shard."""
+    out = run_sub("""
+        from repro.configs import ARCH_IDS, get_arch
+        from repro.distributed import sharding as S
+        from repro.launch import specs as sp
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rules = S.ShardingRules(mesh)
+        bad = []
+        for arch in ARCH_IDS:
+            cfg = get_arch(arch).reduced()
+            t = sp.param_specs(cfg, dtype=jnp.float32)
+            specs = S.tree_specs(t, rules.param_spec)
+            leaves_t = jax.tree.leaves(t)
+            leaves_s = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec))
+            for leaf, spec in zip(leaves_t, leaves_s):
+                for dim, ax in zip(leaf.shape, tuple(spec)):
+                    if ax is None: continue
+                    size = 1
+                    for a in ([ax] if isinstance(ax, str) else ax):
+                        size *= mesh.shape[a]
+                    if dim % size != 0:
+                        bad.append((arch, leaf.shape, str(spec)))
+        print(json.dumps({"bad": bad[:5], "count": len(bad)}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["count"] == 0, rec["bad"]
+
+
+def test_seq_shard_activations_numerically_identical():
+    """The SP lever (§Perf) only changes layout, never math."""
+    out = run_sub("""
+        import dataclasses
+        from repro.configs.base import ArchConfig
+        from repro.models import init_params
+        from repro.optim import adamw
+        from repro.training.step import make_train_step
+        from repro.distributed import sharding as S
+        base = ArchConfig(name="t", family="dense", num_layers=2, d_model=64,
+                          num_heads=4, kv_heads=2, d_ff=128, vocab=128,
+                          head_dim=16, attn_chunk=16)
+        sp = dataclasses.replace(base, seq_shard_activations=True)
+        params = init_params(base, jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        ocfg = adamw.OptimizerConfig(total_steps=5)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 128)
+        batch = {"tokens": toks, "labels": toks}
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rules = S.ShardingRules(mesh)
+        pspecs = S.tree_specs(params, rules.param_spec)
+        psh = S.tree_shardings(mesh, pspecs)
+        osh = S.tree_shardings(mesh, S.opt_shardings(pspecs, opt))
+        bsh = S.tree_shardings(mesh, S.tree_specs(batch, rules.batch_spec))
+        with jax.set_mesh(mesh):
+            losses = []
+            for cfg in (base, sp):
+                ts = make_train_step(cfg, ocfg)
+                jf = jax.jit(ts, in_shardings=(psh, osh, bsh),
+                             out_shardings=(psh, osh, None))
+                _, _, m = jf(params, opt, batch)
+                losses.append(float(m["loss"]))
+        print(json.dumps({"diff": abs(losses[0] - losses[1])}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["diff"] < 1e-5

@@ -1,0 +1,108 @@
+"""Dry-run machinery unit tests (parser, specs) — the full 512-device runs
+live in launch/dryrun.py and their outputs in experiments/dryrun/."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.launch import specs as specs_mod
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import HARDWARE
+
+
+HLO_SAMPLE = """
+  %all-gather = f32[4096,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %all-reduce.1 = bf16[256,4096]{1,0} all-reduce(%dot.1), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[128]{0} reduce-scatter(%y), channel_id=3, replica_groups=[1,4]<=[4], dimensions={0}
+  %cp = u32[64]{0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1}}
+  %ard = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), replica_groups={{0,1,2,3}}, to_apply=%add
+"""
+
+
+def test_collective_parser_kinds_and_sizes():
+    out = collective_bytes(HLO_SAMPLE)
+    # all-gather: result 4096*256*4 bytes, group 16 -> operand = /16
+    assert out["all-gather"] == 4096 * 256 * 4 / 16
+    # all-reduce: operand == result (plus the tuple one: 2*8*4 bytes)
+    assert out["all-reduce"] == 256 * 4096 * 2 + 2 * 8 * 4
+    # reduce-scatter: operand = result * group(4)
+    assert out["reduce-scatter"] == 128 * 4 * 4
+    assert out["collective-permute"] == 64 * 4
+    assert out["total_operand"] == sum(
+        v for k, v in out.items() if k not in ("total_operand", "wire_bytes"))
+    assert out["wire_bytes"] > 0
+
+
+def test_collective_parser_ignores_done_ops():
+    txt = "%ag-done = f32[8]{0} all-gather-done(%ag-start)"
+    out = collective_bytes(txt)
+    assert out["total_operand"] == 0
+
+
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_input_specs_shapes(shape_name):
+    cfg = get_arch("llama3p2_1b")
+    shape = get_shape(shape_name)
+    sp = specs_mod.input_specs(cfg, shape)
+    if shape.kind == "train":
+        assert sp["batch"]["tokens"].shape == (shape.global_batch,
+                                               shape.seq_len)
+        assert sp["batch"]["labels"].dtype == jnp.int32
+    elif shape.kind == "prefill":
+        assert "labels" not in sp["batch"]
+    else:
+        assert sp["token"].shape == (shape.global_batch,)
+        kv = [l for l in _leaves(sp["cache"]) if l.ndim == 5]
+        assert kv, "decode cache must contain stacked kv tensors"
+        assert kv[0].shape[3] == cfg.kv_heads
+
+
+def _leaves(tree):
+    import jax
+    return jax.tree.leaves(tree)
+
+
+def test_frontend_archs_get_prefix_embeddings():
+    cfg = get_arch("phi3_vision_4p2b")
+    sp = specs_mod.input_specs(cfg, get_shape("train_4k"))
+    assert sp["batch"]["prefix_emb"].shape == (256, cfg.frontend_len,
+                                               cfg.d_model)
+
+
+def test_long500k_gates():
+    for arch, expect in [("mamba2_780m", True), ("recurrentgemma_9b", True),
+                         ("mistral_large_123b", False),
+                         ("musicgen_large", False)]:
+        cfg = get_arch(arch)
+        ok, reason = cfg.shape_supported(get_shape("long_500k"))
+        assert ok == expect, (arch, reason)
+
+
+def test_hardware_constants_present():
+    assert HARDWARE["peak_flops_bf16"] == 197e12
+    assert HARDWARE["hbm_bandwidth"] == 819e9
+    assert HARDWARE["ici_bandwidth"] == 50e9
+
+
+def test_collective_parser_tuple_with_index_comments():
+    """Tuple result types carry /*index=N*/ comments past element 4 — the
+    exact formatting that silently zeroed the parser twice during bring-up."""
+    line = ("  %all-reduce.1 = (f32[], f32[1024,256]{1,0}, f32[256]{0}, "
+            "f32[2,256,128]{2,1,0}, f32[2,256,256]{2,1,0}, "
+            "/*index=5*/f32[2,256,256]{2,1,0}, f32[2,256,128]{2,1,0}) "
+            "all-reduce(%a, %b, %c, %d, %e, %f, %g), "
+            "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add")
+    out = collective_bytes(line)
+    want = 4 * (1 + 1024 * 256 + 256 + 2 * 256 * 128 + 2 * 256 * 256
+                + 2 * 256 * 256 + 2 * 256 * 128)
+    assert out["all-reduce"] == want
+    assert out["wire_bytes"] == 2 * want * 7 / 8
+
+
+def test_collective_parser_shardmap_psum_line():
+    line = ("%psum.7 = f32[8,128]{1,0} all-reduce(%param.1), channel_id=1, "
+            "replica_groups={{0,1,2,3,4,5,6,7}}, use_global_device_ids=true, "
+            "to_apply=%region_0.0")
+    out = collective_bytes(line)
+    assert out["all-reduce"] == 8 * 128 * 4

@@ -1,0 +1,127 @@
+"""End-to-end PathEnum engine behaviour vs the reference oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (PathEnum, build_index, build_index_jax, erdos_renyi,
+                        enumerate_paths_idx, enumerate_paths_join, grid,
+                        layered_dag, oracle, plan_query, power_law,
+                        walk_count_dp)
+from repro.core.baseline import generic_dfs
+
+
+GRAPHS = {
+    "er": erdos_renyi(64, 3.0, seed=0),
+    "er_dense": erdos_renyi(40, 6.0, seed=1),
+    "pl": power_law(96, 4.0, seed=2),
+    "dag": layered_dag(4, 8, 3.0, seed=3),
+    "grid": grid(5, 5),
+}
+
+
+def queries_for(g, count=3, seed=0, k_reach=None):
+    """Random (s, t) pairs; with k_reach set, only pairs with distance ≤ 3
+    (the paper's query-generation rule, §7.1) so results exist."""
+    rng = np.random.default_rng(seed)
+    out = []
+    tries = 0
+    while len(out) < count and tries < 500:
+        tries += 1
+        s, t = rng.integers(0, g.n, size=2)
+        if s == t:
+            continue
+        if k_reach is not None:
+            d = oracle.bfs_dist_np(g, int(s), 3, excluded=int(t))
+            if d[int(t)] > 3:
+                continue
+        out.append((int(s), int(t)))
+    return out
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("k", [2, 4, 6])
+def test_engine_matches_oracle(gname, k):
+    g = GRAPHS[gname]
+    eng = PathEnum(tau=50)  # low tau: exercise the full optimizer often
+    for (s, t) in queries_for(g, 3, seed=k):
+        want = oracle.enumerate_paths(g, s, t, k)
+        out = eng.query(g, s, t, k, mode="auto")
+        assert sorted(out.result.as_tuples()) == want
+        assert out.result.count == len(want)
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_join_equals_dfs_any_cut(gname):
+    g = GRAPHS[gname]
+    k = 5
+    eng = PathEnum()
+    for (s, t) in queries_for(g, 2, seed=17):
+        base = eng.query(g, s, t, k, mode="dfs")
+        want = sorted(base.result.as_tuples())
+        for cut in range(1, k):
+            out = eng.query(g, s, t, k, mode="join", cut=cut)
+            assert sorted(out.result.as_tuples()) == want, f"cut={cut}"
+
+
+def test_first_n_is_prefix_and_fast_path():
+    g = GRAPHS["dag"]
+    s, t, k = g.n - 2, g.n - 1, 5
+    eng = PathEnum()
+    full = eng.query(g, s, t, k, mode="dfs")
+    part = eng.query(g, s, t, k, mode="dfs", first_n=10)
+    assert part.result.count >= 10
+    assert not part.result.exhausted
+    got = set(part.result.as_tuples())
+    assert got.issubset(set(full.result.as_tuples()))
+
+
+def test_count_only_matches_materialized():
+    g = GRAPHS["er_dense"]
+    eng = PathEnum()
+    for (s, t) in queries_for(g, 3, seed=5):
+        a = eng.query(g, s, t, 5, mode="dfs", count_only=True)
+        b = eng.query(g, s, t, 5, mode="dfs")
+        assert a.result.count == b.result.count
+
+
+def test_baseline_agrees_and_index_saves_edge_accesses():
+    g = GRAPHS["pl"]
+    eng = PathEnum()
+    checked = 0
+    for (s, t) in queries_for(g, 5, seed=2, k_reach=5):
+        want = oracle.enumerate_paths(g, s, t, 5)
+        base = generic_dfs(g, s, t, 5)
+        out = eng.query(g, s, t, 5, mode="dfs")
+        assert base.paths == want
+        assert sorted(out.result.as_tuples()) == want
+        if len(want) > 0:
+            # Fig. 6 claim: the index accesses far fewer edges per step
+            assert out.result.stats.edges_accessed <= base.stats.edges_accessed
+            checked += 1
+    assert checked > 0
+
+
+def test_k_less_than_two_rejected():
+    g = GRAPHS["er"]
+    with pytest.raises(ValueError):
+        PathEnum().query(g, 0, 1, 1)
+
+
+def test_no_results_query_is_fast_and_empty():
+    # target unreachable within k
+    g = layered_dag(6, 4, 2.0, seed=9)
+    s, t = g.n - 2, g.n - 1
+    out = PathEnum().query(g, s, t, 2)  # needs >= 7 hops
+    assert out.result.count == 0
+
+
+def test_planner_cost_model_fields():
+    g = GRAPHS["dag"]
+    s, t = g.n - 2, g.n - 1
+    idx = build_index(g, s, t, 5)
+    plan = plan_query(idx, tau=-1.0)  # force the full estimator
+    assert plan.used_full_estimator
+    assert plan.t_dfs is not None and plan.t_join is not None
+    dp = walk_count_dp(idx)
+    assert dp.q_prefix[0] == 1.0  # C_0 = {s}
+    # |Q| consistency: forward and backward totals agree
+    assert np.isclose(dp.q_prefix[idx.k], dp.q_suffix[0])

@@ -1,0 +1,112 @@
+"""Light-weight index semantics (Alg. 3), jit build parity, and the
+Appendix-B pruning-power equivalence against the full reducer (Alg. 2)."""
+import numpy as np
+import pytest
+
+from repro.core import erdos_renyi, power_law, build_index, build_index_jax
+from repro.core.oracle import bfs_dist_np
+from repro.core.relations import build_relations, relation_neighbors
+
+
+def brute_it(g, dist_t, v, b, k, s, t):
+    out = []
+    for v2 in g.neighbors(v):
+        v2 = int(v2)
+        if v2 == s or v == t:
+            continue
+        if dist_t[v2] <= b:
+            out.append(v2)
+    return sorted(out)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("k", [3, 5])
+def test_index_lookups_match_bruteforce(seed, k):
+    g = erdos_renyi(50, 4.0, seed=seed)
+    s, t = 0, g.n - 1
+    idx = build_index(g, s, t, k)
+    ds, dt = idx.dist_s, idx.dist_t
+    for v in range(g.n):
+        for b in range(k + 1):
+            got = sorted(int(x) for x in idx.it(v, b))
+            want = [v2 for v2 in brute_it(g, dt, v, b, k, s, t)
+                    if ds[v] + 1 + dt[v2] <= k]
+            assert got == sorted(want), (v, b)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_level_sets_match_prop43(seed):
+    k = 5
+    g = power_law(80, 4.0, seed=seed)
+    s, t = 1, 2
+    idx = build_index(g, s, t, k)
+    ds = bfs_dist_np(g, s, k, reverse=False, excluded=t)
+    dt = bfs_dist_np(g, t, k, reverse=True, excluded=s)
+    for i in range(k + 1):
+        want = sorted(v for v in range(g.n)
+                      if ds[v] <= i and dt[v] <= k - i)
+        assert sorted(idx.level(i).tolist()) == want
+    assert idx.level_count[0] in (0, 1)  # C_0 ⊆ {s}
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_jax_build_bitwise_equals_host_build(seed):
+    rng = np.random.default_rng(seed)
+    g = erdos_renyi(int(rng.integers(10, 80)), 3.5, seed=seed + 40)
+    k = int(rng.integers(2, 7))
+    a = build_index(g, 0, g.n - 1, k)
+    b = build_index_jax(g, 0, g.n - 1, k)
+    for f in ["dist_s", "dist_t", "fwd_dst", "fwd_eid", "fwd_begin",
+              "fwd_end", "rev_src", "rev_begin", "rev_end", "level_count"]:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert np.allclose(a.gamma, b.gamma, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_appendix_b_pruning_equivalence(seed):
+    """After the full reducer, R_i(u_{i-1}:v, u_i) == I_t(v, k-i)."""
+    k = 4
+    g = erdos_renyi(40, 3.0, seed=seed + 7)
+    s, t = 0, g.n - 1
+    idx = build_index(g, s, t, k)
+    rels = build_relations(g, s, t, k)
+    for i in range(1, k + 1):
+        ri = rels[i - 1]
+        for v in set(int(x) for x in ri[:, 0]):
+            if v == t:
+                continue
+            want = relation_neighbors(rels, i, v) - {t} \
+                if False else relation_neighbors(rels, i, v)
+            want.discard(-1)
+            got = set(int(x) for x in idx.it(v, k - i))
+            assert want == got, (i, v)
+
+
+def test_reverse_index_symmetry():
+    g = erdos_renyi(40, 4.0, seed=5)
+    k = 4
+    s, t = 0, g.n - 1
+    idx = build_index(g, s, t, k)
+    # every forward edge must appear in the reverse index with the same
+    # budget semantics: u in I_s(v, dist_s[u]) iff v in I_t(u, dist_t[v])
+    for v in range(g.n):
+        for b in range(k + 1):
+            got = sorted(int(x) for x in idx.is_(v, b))
+            want = []
+            for u in g.in_neighbors(v):
+                u = int(u)
+                if u == t or v == s:
+                    continue
+                if idx.dist_s[u] <= b and \
+                        idx.dist_s[u] + 1 + idx.dist_t[v] <= idx.k:
+                    want.append(u)
+            assert got == sorted(want), (v, b)
+
+
+def test_edge_predicate_mask_filters():
+    g = erdos_renyi(40, 4.0, seed=8)
+    k = 4
+    # forbid all edges into even vertices; index must contain none
+    mask = (g.edst % 2) == 1
+    idx = build_index(g, 0, g.n - 1, k, edge_mask=np.asarray(mask))
+    assert np.all(idx.fwd_dst % 2 == 1) or idx.fwd_dst.size == 0

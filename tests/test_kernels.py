@@ -1,0 +1,121 @@
+"""Pallas kernels: shape/dtype sweeps asserting allclose vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.semiring_spmm import counting_spmm as raw_counting
+from repro.kernels.semiring_spmm import minplus_spmv as raw_minplus
+
+RNG = np.random.default_rng(0)
+INF = 1e9
+
+
+# ---------------------------------------------------------------------------
+# semiring kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 128, 200, 384])
+def test_minplus_sweep(n):
+    adj_m = (RNG.random((n, n)) < 0.05)
+    adj = np.where(adj_m, 1.0, INF).astype(np.float32)
+    dist = np.where(RNG.random(n) < 0.2, RNG.integers(0, 5, n), INF).astype(
+        np.float32)
+    got = ops.minplus_spmv(jnp.array(adj), jnp.array(dist), inf=INF)
+    want = ref.minplus_spmv_ref(jnp.array(adj), jnp.array(dist), INF)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,q", [(128, 128), (256, 64), (200, 40), (64, 8)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_counting_sweep(n, q, dtype):
+    adj = (RNG.random((n, n)) < 0.05).astype(np.float32)
+    counts = RNG.integers(0, 8, size=(n, q)).astype(dtype)
+    got = ops.counting_spmm(jnp.array(adj), jnp.array(counts, np.float32))
+    want = ref.counting_spmm_ref(jnp.array(adj),
+                                 jnp.array(counts, np.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_bfs_dense_matches_edge_relax():
+    from repro.core import erdos_renyi
+    from repro.core.bfs import bfs_edge_relax
+    g = erdos_renyi(150, 3.0, seed=2)
+    A = np.full((g.n, g.n), INF, np.float32)
+    A[g.esrc, g.edst] = 1.0
+    for k in (2, 5):
+        dd = np.asarray(ops.bfs_dense(jnp.array(A), 0, k, inf=INF))
+        de = np.asarray(bfs_edge_relax(jnp.array(g.esrc), jnp.array(g.edst),
+                                       g.n, k, jnp.int32(0), jnp.int32(-1)))
+        same = np.minimum(dd, k + 1) == np.minimum(de, k + 1)
+        assert np.all(same | ((dd >= k + 1) & (de >= k + 1)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,H,Hkv,D", [
+    (128, 4, 4, 64), (256, 8, 4, 64), (256, 8, 2, 32), (128, 8, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(L, H, Hkv, D, dtype):
+    B = 2
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, L, H, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, L, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, L, Hkv, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, bq=128, bk=128)
+    want = ref.mha_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_window(window):
+    B, L, H, D = 1, 256, 4, 32
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, L, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, L, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, L, H, D))
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              bq=128, bk=128)
+    want = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_ragged_fallback():
+    B, L, H, D = 1, 100, 4, 32   # non-tile-aligned -> padded/fallback paths
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, L, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(7), (B, L, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(8), (B, L, H, D))
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,Hkv,D", [
+    (512, 8, 2, 64), (1024, 8, 8, 32), (512, 16, 1, 64), (777, 4, 2, 32),
+])
+def test_decode_attention_sweep(S, H, Hkv, D):
+    B = 3
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, H, D))
+    kc = jax.random.normal(jax.random.PRNGKey(10), (B, S, Hkv, D))
+    vc = jax.random.normal(jax.random.PRNGKey(11), (B, S, Hkv, D))
+    lens = jnp.array([S, max(1, S // 2), 3], jnp.int32)
+    got = ops.decode_attention(q, kc, vc, lens, bs=256)
+    want = ref.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_raw_kernels_require_alignment():
+    with pytest.raises(AssertionError):
+        raw_minplus(jnp.zeros((100, 100)), jnp.zeros((100,)), inf=INF,
+                    interpret=True)
+    with pytest.raises(AssertionError):
+        raw_counting(jnp.zeros((100, 100)), jnp.zeros((100, 4)),
+                     interpret=True)

@@ -1,0 +1,100 @@
+"""Hypothesis property tests on the engine's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PathEnum, build_index, enumerate_paths_idx,
+                        enumerate_paths_join, from_edges, oracle,
+                        preliminary_estimate, walk_count_dp)
+
+
+@st.composite
+def graph_query(draw):
+    n = draw(st.integers(6, 28))
+    m = draw(st.integers(n, 4 * n))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    g = from_edges(n, np.array(edges, dtype=np.int64))
+    s = draw(st.integers(0, n - 1))
+    t = draw(st.integers(0, n - 1).filter(lambda x: x != s))
+    k = draw(st.integers(2, 6))
+    return g, s, t, k
+
+
+@settings(max_examples=40, deadline=None)
+@given(graph_query())
+def test_dfs_enumeration_matches_oracle(gq):
+    g, s, t, k = gq
+    want = oracle.enumerate_paths(g, s, t, k)
+    idx = build_index(g, s, t, k)
+    got = enumerate_paths_idx(idx)
+    assert sorted(got.as_tuples()) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_query(), st.integers(1, 4))
+def test_join_enumeration_matches_oracle(gq, cut_raw):
+    g, s, t, k = gq
+    cut = 1 + (cut_raw % (k - 1))
+    want = oracle.enumerate_paths(g, s, t, k)
+    idx = build_index(g, s, t, k)
+    got = enumerate_paths_join(idx, cut=cut)
+    assert sorted(got.as_tuples()) == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(graph_query())
+def test_walk_dp_is_exact_on_walks(gq):
+    g, s, t, k = gq
+    idx = build_index(g, s, t, k)
+    dp = walk_count_dp(idx)
+    assert abs(dp.q_total - oracle.count_walks(g, s, t, k)) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(graph_query())
+def test_paths_bounded_by_walks(gq):
+    """δ_P ≤ δ_W — the estimator upper-bounds the result count (§6.4)."""
+    g, s, t, k = gq
+    idx = build_index(g, s, t, k)
+    dp = walk_count_dp(idx)
+    res = enumerate_paths_idx(idx, count_only=True)
+    assert res.count <= dp.q_total + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_query())
+def test_emitted_paths_are_valid_simple_paths(gq):
+    g, s, t, k = gq
+    edge_set = set(zip(g.esrc.tolist(), g.edst.tolist()))
+    idx = build_index(g, s, t, k)
+    got = enumerate_paths_idx(idx)
+    for p in got.as_tuples():
+        assert p[0] == s and p[-1] == t
+        assert 1 <= len(p) - 1 <= k
+        assert len(set(p)) == len(p)
+        for a, b in zip(p, p[1:]):
+            assert (a, b) in edge_set
+        assert all(v not in (s, t) for v in p[1:-1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_query())
+def test_preliminary_estimator_nonnegative_and_finite(gq):
+    g, s, t, k = gq
+    idx = build_index(g, s, t, k)
+    est = preliminary_estimate(idx)
+    assert est >= 0.0 and np.isfinite(est)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graph_query(), st.integers(1, 50))
+def test_first_n_returns_at_least_n_or_all(gq, n):
+    g, s, t, k = gq
+    idx = build_index(g, s, t, k)
+    total = enumerate_paths_idx(idx, count_only=True).count
+    got = enumerate_paths_idx(idx, first_n=n)
+    if total >= n:
+        assert got.count >= n
+    else:
+        assert got.count == total

@@ -1,0 +1,120 @@
+"""Trainer, checkpoint/restart, microbatch equivalence, constraints."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import PathCorpus, SyntheticLM
+from repro.models import init_params
+from repro.optim import adamw
+from repro.training import step as step_mod
+from repro.training.trainer import Trainer, TrainerConfig
+
+TINY = ArchConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+                  attn_chunk=16, tie_embeddings=True)
+
+
+def test_loss_decreases():
+    data = SyntheticLM(vocab=TINY.vocab, seq_len=32, global_batch=4)
+    opt = adamw.OptimizerConfig(peak_lr=1e-3, warmup_steps=3, total_steps=25)
+    tr = Trainer(TINY, opt, TrainerConfig(steps=25, log_every=5))
+    tr.fit(data)
+    assert tr.metrics_log[-1]["loss"] < tr.metrics_log[0]["loss"]
+
+
+def test_checkpoint_roundtrip_and_restart(tmp_path):
+    data = SyntheticLM(vocab=TINY.vocab, seq_len=16, global_batch=2)
+    opt = adamw.OptimizerConfig(peak_lr=1e-3, total_steps=12)
+    d = str(tmp_path / "ckpt")
+
+    tr1 = Trainer(TINY, opt, TrainerConfig(steps=6, ckpt_every=3,
+                                           ckpt_dir=d, log_every=1))
+    p1, o1 = tr1.fit(data)
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() == 6
+
+    # restart continues from step 6 and reaches 12
+    tr2 = Trainer(TINY, opt, TrainerConfig(steps=12, ckpt_every=3,
+                                           ckpt_dir=d, log_every=1))
+    p2, o2 = tr2.fit(data)
+    assert tr2.metrics_log[0]["step"] >= 6  # resumed, not restarted
+    assert mgr.latest_step() == 12
+
+    # deterministic equivalence: uninterrupted 12-step run matches restart
+    tr3 = Trainer(TINY, opt, TrainerConfig(steps=12, log_every=1))
+    p3, _ = tr3.fit(data)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-5)
+
+
+def test_checkpoint_retention_and_manifest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": np.arange(5), "b": {"c": np.ones((2, 2))}}
+    for s in (1, 2, 3):
+        mgr.save(s, {"state": tree}, extra={"data_step": s})
+    assert mgr.all_steps() == [2, 3]
+    restored, manifest = mgr.restore(3, {"state": tree})
+    np.testing.assert_array_equal(restored["state"]["a"], tree["a"])
+    assert manifest["extra"]["data_step"] == 3
+
+
+def test_emergency_save_handler(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    saved = {}
+    mgr.install_signal_handler(lambda: saved.setdefault("hit", True))
+    with pytest.raises(SystemExit):
+        signal.raise_signal(signal.SIGTERM)
+    assert saved.get("hit")
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    opt = adamw.OptimizerConfig(peak_lr=1e-3, total_steps=10)
+    data = SyntheticLM(vocab=TINY.vocab, seq_len=16, global_batch=4)
+    batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+
+    s1 = step_mod.make_train_step(TINY, opt, microbatches=1)
+    s2 = step_mod.make_train_step(TINY, opt, microbatches=2)
+    st = adamw.init(params)
+    p1, _, m1 = jax.jit(s1)(params, st, batch)
+    p2, _, m2 = jax.jit(s2)(params, st, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_path_corpus_batches_are_valid():
+    from repro.core import power_law
+    g = power_law(200, 5.0, seed=4)
+    pc = PathCorpus(graph=g, k=4, seq_len=16, global_batch=4)
+    b = pc.batch_at(0)
+    assert b["tokens"].shape == (4, 16)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < pc.vocab
+    assert (b["labels"] >= -1).all()
+
+
+def test_data_stream_deterministic_restart():
+    d1 = SyntheticLM(vocab=64, seq_len=8, global_batch=2, seed=9)
+    d2 = SyntheticLM(vocab=64, seq_len=8, global_batch=2, seed=9)
+    np.testing.assert_array_equal(d1.batch_at(7)["tokens"],
+                                  d2.batch_at(7)["tokens"])
+
+
+def test_cosine_schedule_shape():
+    opt = adamw.OptimizerConfig(peak_lr=1.0, warmup_steps=10,
+                                total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(adamw.cosine_schedule(opt, jnp.int32(s)))
+           for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-2
