@@ -8,6 +8,9 @@ from .planner import Plan, plan_query, DEFAULT_TAU
 from .enumerate import EnumResult, EnumStats, EngineLimit, enumerate_paths_idx
 from .join import enumerate_paths_join
 from .pathenum import PathEnum, QueryOutput, QueryTiming
+from .batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
+                    CacheStats, IndexCache, batched_index_distances,
+                    edge_mask_hash)
 from .baseline import generic_dfs
 from . import oracle, constraints, relations
 
@@ -18,4 +21,6 @@ __all__ = [
     "plan_query", "DEFAULT_TAU", "EnumResult", "EnumStats", "EngineLimit",
     "enumerate_paths_idx", "enumerate_paths_join", "PathEnum", "QueryOutput",
     "QueryTiming", "generic_dfs", "oracle", "constraints", "relations",
+    "BatchPathEnum", "BatchOutput", "BatchItem", "BatchTiming", "CacheStats",
+    "IndexCache", "batched_index_distances", "edge_mask_hash",
 ]

@@ -1,0 +1,410 @@
+"""BatchPathEnum — the online-workload engine (DESIGN.md §4).
+
+The paper's headline metrics are measured on *batches* of queries (the
+1000-query online sets of §7.1), yet the Figure-2 pipeline is strictly
+per-query.  Batch HcPE processing (Yuan et al., arXiv:2312.01424) shows the
+serving wins come from cross-query sharing; this module brings three of
+those sharing levers to the PathEnum pipeline:
+
+  1. **result dedup** — identical ``(s, t, k)`` queries in a batch run the
+     pipeline once; duplicates receive the same ``EnumResult`` object.
+  2. **index cache** — ``LightweightIndex`` builds are cached in an LRU
+     keyed on ``(s, t, k, edge_mask_hash)`` that persists across batches,
+     so recurring queries (the hot s-t pairs of a production workload) skip
+     the build entirely.  Cache stats (hits / misses / evictions) are
+     first-class so callers can assert on reuse.
+  3. **stacked BFS** — the two bounded-BFS distance passes of every
+     cache-missing query are stacked into one (Q, n) frontier matrix and
+     relaxed together: one ``minimum.reduceat`` over the CSR per hop
+     serves all Q queries (the batched analogue of bfs.bfs_edge_relax,
+     and the host mirror of the mesh-vmapped BFS in distributed/engine.py).
+
+The planner still runs once per *distinct* query — plans are per-query
+decisions (§6) and do not share — and enumeration reuses the per-query
+machinery unchanged, so every count is byte-identical to sequential
+``PathEnum.count`` (tests/test_batch.py asserts this).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import planner as planner_mod
+from .enumerate import EnumResult, enumerate_paths_idx
+from .graph import Graph
+from .index import LightweightIndex, build_index
+from .join import enumerate_paths_join
+from .pathenum import PathEnum
+from .planner import DEFAULT_TAU, Plan
+
+QueryKey = Tuple[int, int, int, int]  # (s, t, k, edge_mask_hash)
+
+
+def edge_mask_hash(edge_mask: Optional[np.ndarray]) -> int:
+    """Stable 64-bit hash of an edge mask (0 for the unmasked graph)."""
+    if edge_mask is None:
+        return 0
+    packed = np.packbits(np.asarray(edge_mask, dtype=bool))
+    return int.from_bytes(hashlib.blake2b(packed.tobytes(),
+                                          digest_size=8).digest(), "big")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def snapshot(self) -> "CacheStats":
+        return CacheStats(self.hits, self.misses, self.evictions)
+
+    def delta(self, since: "CacheStats") -> "CacheStats":
+        return CacheStats(self.hits - since.hits, self.misses - since.misses,
+                          self.evictions - since.evictions)
+
+
+class IndexCache:
+    """LRU over ``LightweightIndex`` keyed on ``(s, t, k, edge_mask_hash)``.
+
+    A hit moves the entry to the MRU slot; inserting past ``capacity``
+    evicts the LRU entry.  Indexes are immutable once built, so sharing one
+    object across queries (and across batches) is safe.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._entries: "collections.OrderedDict[QueryKey, LightweightIndex]" \
+            = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: QueryKey) -> Optional[LightweightIndex]:
+        idx = self._entries.get(key)
+        if idx is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return idx
+
+    def put(self, key: QueryKey, idx: LightweightIndex) -> None:
+        if self.capacity == 0:
+            return
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self._entries[key] = idx
+            return
+        while len(self._entries) >= self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        self._entries[key] = idx
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# ---------------------------------------------------------------------------
+# Stacked-frontier BFS: all cache-missing queries relax together
+# ---------------------------------------------------------------------------
+
+def batched_bounded_bfs(indptr: np.ndarray, indices: np.ndarray, n: int,
+                        srcs: np.ndarray, excluded: np.ndarray,
+                        kmax: int) -> np.ndarray:
+    """(Q, n) bounded distances via stacked edge-parallel relaxation.
+
+    ``indices`` must hold, per CSR segment of ``indptr``, the *predecessor*
+    ids of each vertex (the reverse CSR for forward distances, the forward
+    CSR for reverse distances).  Semantics match oracle.bfs_dist_np: the
+    per-row ``excluded`` vertex contributes no relaxations (no transit) but
+    may still receive a distance.  Rows relax simultaneously — one
+    ``minimum.reduceat`` per hop covers every query — which is the whole
+    point: the per-hop cost is one O(Q·m) segmented min instead of Q queue
+    traversals.  Returns distances with sentinel ``kmax + 1``.
+    """
+    Q = int(len(srcs))
+    INF = np.int32(kmax + 1)
+    dist = np.full((Q, n), INF, dtype=np.int32)
+    if Q == 0:
+        return dist
+    dist[np.arange(Q), np.asarray(srcs, np.int64)] = 0
+    m = int(indices.shape[0])
+    if m == 0:
+        return dist
+    starts = indptr[:-1].astype(np.int64)
+    has_pred = (np.diff(indptr) > 0)[None, :]        # (1, n)
+    pred = indices.astype(np.int64)                   # (m,) grouped by vertex
+    exc = np.asarray(excluded, np.int64)[:, None]     # (Q, 1)
+    # pred-free vertices have starts == m, out of reduceat's index range;
+    # an INF pad column makes index m valid WITHOUT clamping (clamping to
+    # m-1 would truncate the preceding vertex's segment and drop its last
+    # predecessor edge from the min)
+    pad_col = np.full((Q, 1), INF, dtype=np.int32)
+    for _ in range(kmax):
+        gathered = dist[:, pred]                      # (Q, m) gather
+        np.putmask(gathered, pred[None, :] == exc, INF)
+        contrib = np.concatenate([gathered, pad_col], axis=1)  # (Q, m+1)
+        seg = np.minimum.reduceat(contrib, starts, axis=1)     # (Q, n)
+        seg = np.where(has_pred, seg, INF)
+        new = np.minimum(dist, np.minimum(seg, INF - 1) + 1)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def batched_index_distances(graph: Graph, queries: Sequence[Tuple[int, int, int]],
+                            block: int = 128) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-query ``(dist_s, dist_t)`` for a list of ``(s, t, k)`` queries.
+
+    Stacks every query's forward pass into one relaxation (and likewise the
+    reverse passes), runs to the batch's max k, then clips each row to its
+    own hop budget — values ≤ k equal the bounded queue BFS exactly, values
+    beyond collapse onto the same ``k + 1`` sentinel, so the downstream
+    index build is byte-identical to the sequential path.  ``block`` bounds
+    the (block, m) gather working set.
+    """
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for lo in range(0, len(queries), max(block, 1)):
+        chunk = queries[lo:lo + max(block, 1)]
+        ss = np.array([q[0] for q in chunk], np.int64)
+        tt = np.array([q[1] for q in chunk], np.int64)
+        kk = np.array([q[2] for q in chunk], np.int64)
+        kmax = int(kk.max())
+        # forward: predecessors of v are the reverse-CSR neighbors
+        ds = batched_bounded_bfs(graph.rindptr, graph.rindices, graph.n,
+                                 ss, tt, kmax)
+        # reverse: predecessors (in the reverse graph) are forward neighbors
+        dt = batched_bounded_bfs(graph.indptr, graph.indices, graph.n,
+                                 tt, ss, kmax)
+        for row, k in enumerate(kk):
+            k = int(k)
+            d_s = np.minimum(ds[row], k + 1).astype(np.int32)
+            d_t = np.minimum(dt[row], k + 1).astype(np.int32)
+            out.append((d_s, d_t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchItem:
+    """Per-query outcome inside a batch (duplicates share ``result``)."""
+    s: int
+    t: int
+    k: int
+    result: EnumResult
+    plan: Plan
+    index_cached: bool          # index came from the LRU (no build)
+    deduplicated: bool          # enumeration reused an earlier item's result
+    latency_seconds: float      # attributable work for THIS query
+
+
+@dataclasses.dataclass
+class BatchTiming:
+    distance_seconds: float = 0.0
+    index_seconds: float = 0.0
+    optimize_seconds: float = 0.0
+    enumerate_seconds: float = 0.0
+    total_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class BatchOutput:
+    items: List[BatchItem]
+    timing: BatchTiming
+    cache_stats: CacheStats          # delta for this batch
+    distinct_queries: int
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.array([it.result.count for it in self.items], np.int64)
+
+    @property
+    def total_results(self) -> int:
+        return int(self.counts.sum())
+
+    def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        lats = np.array([it.latency_seconds for it in self.items])
+        if lats.size == 0:
+            return {f"p{q}_ms": 0.0 for q in qs}
+        return {f"p{q}_ms": float(np.percentile(lats, q) * 1e3) for q in qs}
+
+    @property
+    def throughput_qps(self) -> float:
+        return len(self.items) / max(self.timing.total_seconds, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class BatchPathEnum:
+    """Batched front-end over the Figure-2 pipeline.
+
+    Accepts ``(s, t, k)`` triples against one graph; shares work across the
+    batch (dedup, index LRU, stacked BFS) and across calls (the LRU
+    persists on the engine).  ``engine`` parameters mirror PathEnum.
+    """
+
+    def __init__(self, tau: float = DEFAULT_TAU, chunk_size: int = 16384,
+                 max_partials: Optional[int] = 20_000_000,
+                 cache_capacity: int = 256, bfs_block: int = 128):
+        self.engine = PathEnum(tau=tau, chunk_size=chunk_size,
+                               max_partials=max_partials)
+        self.cache = IndexCache(capacity=cache_capacity)
+        self.bfs_block = bfs_block
+
+    # -- index acquisition --------------------------------------------------
+    def _indexes_for(self, graph: Graph, keys: List[QueryKey],
+                     edge_mask: Optional[np.ndarray],
+                     precomputed: Optional[Dict[QueryKey, Tuple[np.ndarray,
+                                                                np.ndarray]]],
+                     timing: BatchTiming) -> Dict[QueryKey, Tuple[LightweightIndex, bool]]:
+        """Resolve each distinct key to (index, was_cached).
+
+        Cache misses on the unmasked graph batch their BFS passes through
+        the stacked relaxation; masked queries fall back to the per-query
+        build (the mask changes the graph under the BFS).
+        """
+        resolved: Dict[QueryKey, Tuple[LightweightIndex, bool]] = {}
+        missing: List[QueryKey] = []
+        for key in keys:
+            if key in resolved:
+                # duplicate occurrence shares the resolved (or in-flight)
+                # build — that's a cache hit: no rebuild happens for it
+                self.cache.stats.hits += 1
+                continue
+            idx = self.cache.get(key)
+            if idx is not None:
+                resolved[key] = (idx, True)
+            else:
+                resolved[key] = (None, False)  # type: ignore[assignment]
+                missing.append(key)
+
+        if not missing:
+            return resolved
+
+        dists: Dict[QueryKey, Tuple[np.ndarray, np.ndarray]] = {}
+        if precomputed:
+            dists.update({k: precomputed[k] for k in missing
+                          if k in precomputed})
+        unmasked = [k for k in missing if k[3] == 0 and k not in dists]
+        if unmasked:
+            t0 = time.perf_counter()
+            stacked = batched_index_distances(
+                graph, [(s, t, k) for (s, t, k, _) in unmasked],
+                block=self.bfs_block)
+            timing.distance_seconds += time.perf_counter() - t0
+            dists.update(dict(zip(unmasked, stacked)))
+
+        for key in missing:
+            s, t, k, _ = key
+            t0 = time.perf_counter()
+            if key in dists:
+                d_s, d_t = dists[key]
+                idx = build_index(graph, s, t, k,
+                                  dist_fn=lambda *_a, _d=(d_s, d_t): _d,
+                                  edge_mask=None)
+            else:  # masked query — BFS must run on the filtered graph
+                idx = build_index(graph, s, t, k, edge_mask=edge_mask)
+            timing.index_seconds += time.perf_counter() - t0
+            self.cache.put(key, idx)
+            resolved[key] = (idx, False)
+        return resolved
+
+    # -- enumeration --------------------------------------------------------
+    def _enumerate(self, idx: LightweightIndex, plan: Plan, count_only: bool,
+                   first_n: Optional[int]) -> EnumResult:
+        if plan.method == "dfs":
+            return enumerate_paths_idx(idx, chunk_size=self.engine.chunk_size,
+                                       count_only=count_only, first_n=first_n)
+        return enumerate_paths_join(idx, cut=plan.cut, count_only=count_only,
+                                    max_partials=self.engine.max_partials)
+
+    def run(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
+            count_only: bool = True, first_n: Optional[int] = None,
+            mode: str = "auto", edge_mask: Optional[np.ndarray] = None,
+            _precomputed_distances: Optional[Dict[QueryKey, Tuple[np.ndarray,
+                                                                  np.ndarray]]] = None,
+            ) -> BatchOutput:
+        """Serve a batch; returns per-query items in input order.
+
+        ``_precomputed_distances`` is the distributed hand-off: the mesh BFS
+        of distributed/engine.py injects (dist_s, dist_t) per key so the
+        host build skips its own distance passes.
+        """
+        t_batch = time.perf_counter()
+        timing = BatchTiming()
+        stats_before = self.cache.stats.snapshot()
+        for (s, t, k) in queries:
+            if k < 2:
+                raise ValueError("paper assumes k >= 2")
+            if s == t:
+                raise ValueError("s and t must be distinct")
+        mh = edge_mask_hash(edge_mask)
+        keys = [(int(s), int(t), int(k), mh) for (s, t, k) in queries]
+
+        resolved = self._indexes_for(graph, keys, edge_mask,
+                                     _precomputed_distances, timing)
+
+        items: List[Optional[BatchItem]] = [None] * len(keys)
+        memo: Dict[QueryKey, BatchItem] = {}
+        for pos, key in enumerate(keys):
+            t0 = time.perf_counter()
+            prior = memo.get(key)
+            if prior is not None:
+                items[pos] = dataclasses.replace(
+                    prior, deduplicated=True, index_cached=True,
+                    latency_seconds=time.perf_counter() - t0)
+                continue
+            idx, was_cached = resolved[key]
+            if mode == "auto":
+                plan = planner_mod.plan_query(idx, tau=self.engine.tau)
+            elif mode == "dfs":
+                plan = Plan(method="dfs", cut=None, preliminary=-1.0,
+                            used_full_estimator=False)
+            elif mode == "join":
+                dp_plan = planner_mod.plan_query(idx, tau=-1.0)
+                cut = dp_plan.cut if dp_plan.cut else max(1, key[2] // 2)
+                plan = Plan(method="join", cut=cut, preliminary=-1.0,
+                            used_full_estimator=True)
+            else:
+                raise ValueError(f"unknown mode {mode!r}")
+            timing.optimize_seconds += plan.optimize_seconds
+            t1 = time.perf_counter()
+            res = self._enumerate(idx, plan, count_only, first_n)
+            timing.enumerate_seconds += time.perf_counter() - t1
+            item = BatchItem(s=key[0], t=key[1], k=key[2], result=res,
+                             plan=plan, index_cached=was_cached,
+                             deduplicated=False,
+                             latency_seconds=time.perf_counter() - t0)
+            memo[key] = item
+            items[pos] = item
+
+        timing.total_seconds = time.perf_counter() - t_batch
+        return BatchOutput(items=list(items), timing=timing,  # type: ignore[arg-type]
+                           cache_stats=self.cache.stats.delta(stats_before),
+                           distinct_queries=len(memo))
+
+    def counts(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
+               **kw) -> np.ndarray:
+        return self.run(graph, queries, count_only=True, **kw).counts

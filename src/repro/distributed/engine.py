@@ -20,14 +20,22 @@ across queries; each query's frontier expansion runs on its data-shard
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core.batch import BatchOutput, BatchPathEnum
 from ..core.graph import Graph
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SM_KW = {"check_vma": False}
+else:                                               # jax 0.4.x fallback
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
 
 
 def _pad_edges(esrc: np.ndarray, edst: np.ndarray, shards: int):
@@ -68,11 +76,10 @@ def make_distributed_bfs(mesh: Mesh, n: int, k: int):
         f = jax.vmap(one_query, in_axes=(None, None, None, 0, 0))
         return f(esrc_l, edst_l, valid_l, srcs_l, exc_l)
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         kernel, mesh=mesh,
         in_specs=(P("model"), P("model"), P("model"), P("data"), P("data")),
-        out_specs=P("data"),
-        check_vma=False)
+        out_specs=P("data"), **_SM_KW)
     return jax.jit(mapped)
 
 
@@ -130,11 +137,10 @@ def make_distributed_walk_dp(mesh: Mesh, n: int, k: int):
         f = jax.vmap(one_query, in_axes=(None, None, None, 0, 0))
         return f(esrc_l, edst_l, valid_l, ds_l, dt_l)
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         kernel, mesh=mesh,
         in_specs=(P("model"), P("model"), P("model"), P("data"), P("data")),
-        out_specs=(P("data"), P("data"), P("data")),
-        check_vma=False)
+        out_specs=(P("data"), P("data"), P("data")), **_SM_KW)
     return jax.jit(mapped)
 
 
@@ -171,3 +177,32 @@ class DistributedPathEnum:
         qp, qs, tot = self._dp(self.esrc, self.edst, self.valid, ds, dt)
         return np.asarray(qp), np.asarray(qs), np.asarray(tot), (
             np.asarray(ds), np.asarray(dt))
+
+    def enumerate_batch(self, queries: np.ndarray, count_only: bool = True,
+                        first_n: Optional[int] = None,
+                        engine: Optional[BatchPathEnum] = None) -> BatchOutput:
+        """Batch entry point: mesh distances, host enumeration.
+
+        ``queries`` is (Q, 2) of (s, t); the hop bound is the engine's k.
+        The query list is padded to a multiple of the ``data`` axis and
+        sharded across it; each device runs the stacked BFS for its query
+        slice (the distance pass dominates index build, Fig. 12a).  The
+        (Q, n) distance matrices then feed core.batch.BatchPathEnum as
+        precomputed distances, so the host pipeline skips its own BFS and
+        goes straight to index assembly, planning and enumeration — with
+        the engine's dedup and index LRU still applying across the batch.
+        """
+        engine = engine or BatchPathEnum()
+        q = np.asarray(queries, np.int64).reshape(-1, 2)
+        triples = [(int(s), int(t), self.k) for (s, t) in q]
+        if q.shape[0] == 0:
+            return engine.run(self.graph, [])
+        dsize = self.mesh.shape["data"]
+        pad = (-q.shape[0]) % dsize
+        padded = np.concatenate([q, np.repeat(q[:1], pad, axis=0)]) \
+            if pad else q
+        _, _, _, (ds, dt) = self.query_batch_stats(padded)
+        pre = {(s, t, k, 0): (ds[i].astype(np.int32), dt[i].astype(np.int32))
+               for i, (s, t, k) in enumerate(triples)}
+        return engine.run(self.graph, triples, count_only=count_only,
+                          first_n=first_n, _precomputed_distances=pre)

@@ -1,0 +1,9 @@
+"""Serving layer: continuous-batching LM decode (engine.py) and the HcPE
+batch query front-end (hcpe.py) — DESIGN.md §4."""
+
+from . import engine  # noqa: F401
+from .hcpe import (BatchServeReport, HcPEServer, PathQueryRequest,
+                   PathQueryResponse)
+
+__all__ = ["engine", "HcPEServer", "PathQueryRequest", "PathQueryResponse",
+           "BatchServeReport"]

@@ -1,0 +1,138 @@
+"""HcPE batch serving front-end (DESIGN.md §4).
+
+Request/response dataclasses around core.batch.BatchPathEnum: a server owns
+one graph + one engine (whose index LRU persists across batches — the hot
+s-t pairs of a production workload keep their indexes warm), turns a list
+of ``PathQueryRequest`` into ``PathQueryResponse`` objects, and reports
+batch-level serving metrics: latency percentiles, throughput, and cache
+reuse.  This is the paper's "online scenario" (§7.1: 1000-query sets,
+response time = first results out) expressed as a service API; the LM
+serving analogue with continuous batching lives in serving/engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.batch import BatchOutput, BatchPathEnum, CacheStats
+from ..core.graph import Graph
+
+
+@dataclasses.dataclass
+class PathQueryRequest:
+    """One HcPE query q(s, t, k) plus serving options."""
+    uid: int
+    s: int
+    t: int
+    k: int
+    count_only: bool = True
+    first_n: Optional[int] = None     # response-time mode: first-n results
+
+
+@dataclasses.dataclass
+class PathQueryResponse:
+    uid: int
+    count: int
+    paths: Optional[np.ndarray]       # (r, k+1) int32 when materialized
+    plan_method: str
+    index_cached: bool                # served off the warm index LRU
+    deduplicated: bool                # shared an identical in-batch query
+    latency_ms: float
+
+
+@dataclasses.dataclass
+class BatchServeReport:
+    """Per-batch serving metrics (the paper's Table-3 axes, batch form)."""
+    batch_size: int
+    distinct_queries: int
+    total_results: int
+    wall_seconds: float
+    throughput_qps: float             # queries / s for the batch
+    results_per_second: float
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    cache: CacheStats                 # hits/misses/evictions for this batch
+
+    @classmethod
+    def from_output(cls, out: BatchOutput) -> "BatchServeReport":
+        pct = out.latency_percentiles((50, 90, 99))
+        wall = out.timing.total_seconds
+        return cls(batch_size=len(out.items),
+                   distinct_queries=out.distinct_queries,
+                   total_results=out.total_results,
+                   wall_seconds=wall,
+                   throughput_qps=out.throughput_qps,
+                   results_per_second=out.total_results / max(wall, 1e-12),
+                   p50_ms=pct["p50_ms"], p90_ms=pct["p90_ms"],
+                   p99_ms=pct["p99_ms"], cache=out.cache_stats)
+
+
+class HcPEServer:
+    """Batch HcPE serving over one graph.
+
+    Groups requests by their (count_only, first_n) serving options — each
+    group is one BatchPathEnum.run — and reassembles responses in request
+    order.  The engine (and therefore the index LRU) is shared across
+    groups and across serve() calls.
+    """
+
+    def __init__(self, graph: Graph, engine: Optional[BatchPathEnum] = None):
+        self.graph = graph
+        self.engine = engine or BatchPathEnum()
+
+    def serve(self, requests: Sequence[PathQueryRequest],
+              ) -> Tuple[List[PathQueryResponse], BatchServeReport]:
+        groups: Dict[Tuple[bool, Optional[int]], List[int]] = {}
+        for pos, req in enumerate(requests):
+            groups.setdefault((req.count_only, req.first_n), []).append(pos)
+
+        responses: List[Optional[PathQueryResponse]] = [None] * len(requests)
+        outputs: List[BatchOutput] = []
+        for (count_only, first_n), positions in groups.items():
+            queries = [(requests[p].s, requests[p].t, requests[p].k)
+                       for p in positions]
+            out = self.engine.run(self.graph, queries, count_only=count_only,
+                                  first_n=first_n)
+            outputs.append(out)
+            for p, item in zip(positions, out.items):
+                responses[p] = PathQueryResponse(
+                    uid=requests[p].uid, count=item.result.count,
+                    paths=None if count_only else item.result.paths,
+                    plan_method=item.plan.method,
+                    index_cached=item.index_cached,
+                    deduplicated=item.deduplicated,
+                    latency_ms=item.latency_seconds * 1e3)
+        report = BatchServeReport.from_output(_merge_outputs(outputs))
+        # the per-group sum double-counts a (s,t,k) served under several
+        # serving options; the request list is the truth
+        report.distinct_queries = len({(r.s, r.t, r.k) for r in requests})
+        return list(responses), report  # type: ignore[arg-type]
+
+
+def _merge_outputs(outputs: List[BatchOutput]) -> BatchOutput:
+    """Fold the per-group outputs into one batch-level view."""
+    if len(outputs) == 1:
+        return outputs[0]
+    items = [it for o in outputs for it in o.items]
+    timing = dataclasses.replace(outputs[0].timing) if outputs else None
+    if not outputs:
+        from ..core.batch import BatchTiming
+        return BatchOutput(items=[], timing=BatchTiming(),
+                           cache_stats=CacheStats(), distinct_queries=0)
+    for o in outputs[1:]:
+        timing.distance_seconds += o.timing.distance_seconds
+        timing.index_seconds += o.timing.index_seconds
+        timing.optimize_seconds += o.timing.optimize_seconds
+        timing.enumerate_seconds += o.timing.enumerate_seconds
+        timing.total_seconds += o.timing.total_seconds
+    cache = CacheStats()
+    for o in outputs:
+        cache.hits += o.cache_stats.hits
+        cache.misses += o.cache_stats.misses
+        cache.evictions += o.cache_stats.evictions
+    return BatchOutput(items=items, timing=timing, cache_stats=cache,
+                       distinct_queries=sum(o.distinct_queries
+                                            for o in outputs))

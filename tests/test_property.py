@@ -1,6 +1,10 @@
 """Hypothesis property tests on the engine's core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (PathEnum, build_index, enumerate_paths_idx,
                         enumerate_paths_join, from_edges, oracle,
