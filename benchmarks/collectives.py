@@ -29,6 +29,7 @@ from repro.models import init_params
 from repro.training.step import make_loss_fn
 from repro.distributed.compression import make_compressed_grad_fn
 from repro.launch.dryrun import collective_bytes
+from repro.compat import make_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 cfg = ArchConfig(name="b", family="dense", num_layers=2, d_model=256,
@@ -38,8 +39,7 @@ params = init_params(cfg, jax.random.PRNGKey(0))
 loss_fn = make_loss_fn(cfg)
 toks = jax.random.randint(jax.random.PRNGKey(1), (16, 64), 0, 1024)
 batch = {"tokens": toks, "labels": toks}
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 
 def plain(params, batch):
     def local(p, b):
@@ -47,8 +47,8 @@ def plain(params, batch):
         l = jax.lax.pmean(l, "data")
         g = jax.tree.map(lambda x: jax.lax.pmean(x, "data"), g)
         return l, g
-    return jax.shard_map(local, mesh=mesh, in_specs=(P(), P("data")),
-                         out_specs=(P(), P()), check_vma=False)(params, batch)
+    return shard_map(local, mesh=mesh, in_specs=(P(), P("data")),
+                     out_specs=(P(), P()))(params, batch)
 
 comp = make_compressed_grad_fn(loss_fn, mesh)
 c_plain = jax.jit(plain).lower(params, batch).compile()

@@ -338,6 +338,7 @@ class BatchPathEnum:
             return enumerate_paths_idx(idx, chunk_size=self.engine.chunk_size,
                                        count_only=count_only, first_n=first_n)
         return enumerate_paths_join(idx, cut=plan.cut, count_only=count_only,
+                                    first_n=first_n,
                                     max_partials=self.engine.max_partials)
 
     def run(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],

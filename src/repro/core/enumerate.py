@@ -160,6 +160,8 @@ def enumerate_paths_idx(
                 if max_results is not None and count > max_results:
                     raise EngineLimit(f"more than {max_results} results")
                 if first_n is not None and count >= first_n:
+                    count = _trim_to_first_n(out_paths, out_lens, count,
+                                             first_n, count_only, stats)
                     return _finalize(idx, out_paths, out_lens, count, stats,
                                      exhausted=False)
 
@@ -176,6 +178,21 @@ def enumerate_paths_idx(
                 work.append((rows[sl], depth + 1, piece_cs))
 
     return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+
+
+def _trim_to_first_n(out_paths, out_lens, count, first_n, count_only,
+                     stats) -> int:
+    """Drop the over-emitted tail of the last chunk so exactly ``first_n``
+    results come back — the first-n counts then agree between the DFS and
+    join paths regardless of either path's emission granularity."""
+    excess = count - first_n
+    if excess > 0:
+        stats.results -= excess
+        if not count_only:
+            out_paths[-1] = out_paths[-1][:-excess]
+            out_lens[-1] = out_lens[-1][:-excess]
+        count = first_n
+    return count
 
 
 def _finalize(idx, out_paths, out_lens, count, stats, exhausted) -> EnumResult:

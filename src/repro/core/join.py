@@ -20,7 +20,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .enumerate import EngineLimit, EnumResult, EnumStats, _finalize
+from .enumerate import (EngineLimit, EnumResult, EnumStats, _finalize,
+                        _trim_to_first_n)
 from .graph import PAD
 from .index import LightweightIndex
 
@@ -84,11 +85,18 @@ def enumerate_paths_join(
     idx: LightweightIndex,
     cut: int,
     count_only: bool = False,
+    first_n: Optional[int] = None,
     max_partials: Optional[int] = None,
     max_results: Optional[int] = None,
     constraint=None,
 ) -> EnumResult:
-    """Algorithm 6 with cut position ``cut`` (i*)."""
+    """Algorithm 6 with cut position ``cut`` (i*).
+
+    ``first_n`` is the paper's response-time mode on the join plan: both
+    halves are still evaluated in full (the join needs them), but emission
+    stops after exactly ``first_n`` results with ``exhausted=False`` — the
+    same truncation contract as enumerate_paths_idx.
+    """
     k, s, t = idx.k, idx.s, idx.t
     if not 0 < cut < k:
         raise ValueError(f"cut must be in (0, k), got {cut}")
@@ -162,5 +170,10 @@ def enumerate_paths_join(
             if not count_only:
                 out_paths.append(rows)
                 out_lens.append(lens)
+            if first_n is not None and count >= first_n:
+                count = _trim_to_first_n(out_paths, out_lens, count,
+                                         first_n, count_only, stats)
+                return _finalize(idx, out_paths, out_lens, count, stats,
+                                 exhausted=False)
 
     return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)

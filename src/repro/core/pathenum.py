@@ -93,6 +93,7 @@ class PathEnum:
         else:
             res = enumerate_paths_join(idx, cut=plan.cut,
                                        count_only=count_only,
+                                       first_n=first_n,
                                        max_partials=self.max_partials,
                                        constraint=constraint)
         timing.enumerate_seconds = time.perf_counter() - t0

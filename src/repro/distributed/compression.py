@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -82,8 +84,7 @@ def make_compressed_grad_fn(loss_fn: Callable, mesh: Mesh,
 
     pspec = P()
     bspec = P(data_axis)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local, mesh=mesh,
-        in_specs=(pspec, bspec), out_specs=(pspec, pspec),
-        check_vma=False)
+        in_specs=(pspec, bspec), out_specs=(pspec, pspec))
     return jax.jit(mapped)

@@ -1,7 +1,8 @@
 """Activation sharding constraints (Megatron-style, GSPMD-mediated).
 
 ``constrain(x, builder)`` applies jax.lax.with_sharding_constraint using the
-*ambient* mesh (jax.set_mesh context).  Outside any mesh — CPU unit tests,
+*ambient* mesh (repro.compat.set_mesh context).  Outside any mesh — CPU unit
+tests,
 the quickstart examples — it is a no-op, so model code can sprinkle
 constraints unconditionally.  Builders get a ShardingRules so every axis
 choice inherits the divisibility fallbacks.
@@ -13,11 +14,12 @@ from typing import Callable, Optional, Sequence, Tuple
 import jax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import get_abstract_mesh
 from .sharding import ShardingRules
 
 
 def current_rules() -> Optional[ShardingRules]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh.empty:
         return None
     return ShardingRules(mesh)

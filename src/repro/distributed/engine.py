@@ -27,15 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map as _shard_map
 from ..core.batch import BatchOutput, BatchPathEnum
 from ..core.graph import Graph
-
-if hasattr(jax, "shard_map"):                       # jax >= 0.6
-    _shard_map = jax.shard_map
-    _SM_KW = {"check_vma": False}
-else:                                               # jax 0.4.x fallback
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SM_KW = {"check_rep": False}
 
 
 def _pad_edges(esrc: np.ndarray, edst: np.ndarray, shards: int):
@@ -79,7 +73,7 @@ def make_distributed_bfs(mesh: Mesh, n: int, k: int):
     mapped = _shard_map(
         kernel, mesh=mesh,
         in_specs=(P("model"), P("model"), P("model"), P("data"), P("data")),
-        out_specs=P("data"), **_SM_KW)
+        out_specs=P("data"))
     return jax.jit(mapped)
 
 
@@ -140,7 +134,7 @@ def make_distributed_walk_dp(mesh: Mesh, n: int, k: int):
     mapped = _shard_map(
         kernel, mesh=mesh,
         in_specs=(P("model"), P("model"), P("model"), P("data"), P("data")),
-        out_specs=(P("data"), P("data"), P("data")), **_SM_KW)
+        out_specs=(P("data"), P("data"), P("data")))
     return jax.jit(mapped)
 
 

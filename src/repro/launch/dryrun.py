@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import set_mesh
+
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -242,7 +244,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                                num_layers=2 * len(pat) + len(tail))
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered, pspecs = build(cfg)
         t_lower = time.time() - t0
         t0 = time.time()

@@ -8,23 +8,22 @@ from __future__ import annotations
 
 import jax
 
+from ..compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """(16, 16) data×model single pod; (2, 16, 16) pod×data×model for 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     """Mesh over whatever devices exist (CPU tests / single host)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel),
+                     ("data", "model"))
 
 
 HARDWARE = {

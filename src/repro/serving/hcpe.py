@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.batch import BatchOutput, BatchPathEnum, CacheStats
+from ..core.batch import BatchOutput, BatchPathEnum, BatchTiming, CacheStats
 from ..core.graph import Graph
 
 
@@ -113,15 +113,20 @@ class HcPEServer:
 
 
 def _merge_outputs(outputs: List[BatchOutput]) -> BatchOutput:
-    """Fold the per-group outputs into one batch-level view."""
+    """Fold the per-group outputs into one batch-level view.
+
+    ``serve([])`` produces no groups, hence no outputs: fold to a
+    well-formed zero output so BatchServeReport.from_output reports
+    all-zero percentiles/throughput rather than taking statistics of an
+    empty latency list.
+    """
+    if not outputs:
+        return BatchOutput(items=[], timing=BatchTiming(),
+                           cache_stats=CacheStats(), distinct_queries=0)
     if len(outputs) == 1:
         return outputs[0]
     items = [it for o in outputs for it in o.items]
-    timing = dataclasses.replace(outputs[0].timing) if outputs else None
-    if not outputs:
-        from ..core.batch import BatchTiming
-        return BatchOutput(items=[], timing=BatchTiming(),
-                           cache_stats=CacheStats(), distinct_queries=0)
+    timing = dataclasses.replace(outputs[0].timing)
     for o in outputs[1:]:
         timing.distance_seconds += o.timing.distance_seconds
         timing.index_seconds += o.timing.index_seconds

@@ -234,5 +234,36 @@ def test_hcpe_server_mixed_serving_options():
     assert resps[0].paths is None
     if resps[1].count:
         assert resps[1].paths is not None
-        assert resps[2].count >= 1
+        assert resps[2].count == 1
+        assert resps[2].paths.shape[0] == 1
     assert report.batch_size == 3
+
+
+def test_hcpe_server_empty_batch_zero_report():
+    """Regression: serve([]) must fold to a well-formed all-zero report,
+    not choke on percentiles of an empty latency list."""
+    g = erdos_renyi(30, 3.0, seed=2)
+    resps, report = HcPEServer(g).serve([])
+    assert resps == []
+    assert report.batch_size == 0
+    assert report.distinct_queries == 0
+    assert report.total_results == 0
+    assert report.throughput_qps == 0.0
+    assert report.results_per_second == 0.0
+    assert report.p50_ms == report.p90_ms == report.p99_ms == 0.0
+    assert report.cache.hits == report.cache.misses == 0
+
+
+def test_batch_first_n_respected_under_join_mode():
+    """Regression: BatchPathEnum dropped first_n whenever the plan was
+    join — response-time mode silently enumerated everything."""
+    g = erdos_renyi(40, 6.0, seed=1)
+    eng = BatchPathEnum()
+    triples = _random_queries(g, 4, np.random.default_rng(9), kmin=5, kmax=5)
+    totals = BatchPathEnum().counts(g, triples, mode="dfs")
+    for mode in ("dfs", "join", "auto"):
+        out = eng.run(g, triples, count_only=False, first_n=3, mode=mode)
+        for item, total in zip(out.items, totals):
+            want = min(3, int(total))
+            assert item.result.count == want, mode
+            assert item.result.paths.shape[0] == want, mode

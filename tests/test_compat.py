@@ -1,0 +1,97 @@
+"""Pins repro.compat's version dispatch (DESIGN.md §6).
+
+These run on whichever jax the environment ships; every assertion is
+phrased against the capability probes so both sides of the skew stay
+exercised (CI runs a pinned-0.4.x leg and a latest-jax leg).  The last
+test enforces the layer's policy mechanically: no skew API spelled
+outside src/repro/compat.py.
+"""
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+
+def test_probes_match_installed_jax():
+    assert compat.HAS_SHARD_MAP == hasattr(jax, "shard_map")
+    assert compat.HAS_AXIS_TYPES == hasattr(jax.sharding, "AxisType")
+    assert compat.HAS_SET_MESH == hasattr(jax, "set_mesh")
+    assert compat.HAS_ABSTRACT_MESH == hasattr(jax.sharding,
+                                               "get_abstract_mesh")
+    assert compat.JAX_VERSION >= (0, 4)
+
+
+def test_axis_type_dispatch():
+    assert hasattr(compat.AxisType, "Auto")
+    if compat.HAS_AXIS_TYPES:
+        assert compat.AxisType is jax.sharding.AxisType
+
+
+def test_make_mesh_defaults_to_auto_axes():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert isinstance(mesh, jax.sharding.Mesh)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+    if compat.HAS_AXIS_TYPES:
+        assert all(t == compat.AxisType.Auto for t in mesh.axis_types)
+
+
+def test_ambient_mesh_roundtrip():
+    """set_mesh scopes the mesh get_abstract_mesh sees, on both sides."""
+    assert compat.get_abstract_mesh().empty
+    mesh = compat.make_mesh((1,), ("data",))
+    with compat.set_mesh(mesh):
+        ambient = compat.get_abstract_mesh()
+        assert not ambient.empty
+        assert dict(ambient.shape) == {"data": 1}
+    assert compat.get_abstract_mesh().empty
+
+
+def test_ambient_mesh_drives_constrain():
+    """distributed.constraints is a no-op outside a mesh, active inside."""
+    from repro.distributed.constraints import current_rules
+
+    assert current_rules() is None
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
+        assert current_rules() is not None
+
+
+def test_shard_map_unified_signature():
+    """One spelling covers check_vma (>= 0.6) and check_rep (0.4.x)."""
+    mesh = compat.make_mesh((1,), ("data",))
+    f = compat.shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
+                         in_specs=(P("data"),), out_specs=P())
+    out = jax.jit(f)(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), np.arange(4.0))
+
+
+_SKEW = re.compile(
+    # modern-only spellings
+    r"jax\.set_mesh|jax\.shard_map|jax\.make_mesh"
+    r"|jax\.sharding\.AxisType|jax\.sharding\.get_abstract_mesh"
+    r"|jax\.sharding\.use_mesh"
+    # 0.4.x-only spellings
+    r"|jax\.experimental\.shard_map|check_vma|check_rep")
+
+
+def test_no_skew_symbol_outside_compat():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    offenders = []
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        for path in sorted((root / sub).rglob("*.py")):
+            if path.name in ("compat.py", "test_compat.py"):
+                continue
+            for ln, line in enumerate(path.read_text().splitlines(), 1):
+                if _SKEW.search(line):
+                    offenders.append(f"{path.relative_to(root)}:{ln}: "
+                                     f"{line.strip()}")
+    assert not offenders, (
+        "skew jax APIs must go through repro/compat.py:\n"
+        + "\n".join(offenders))

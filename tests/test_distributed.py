@@ -47,8 +47,8 @@ def test_distributed_pathenum_matches_host():
     out = run_sub("""
         from repro.core import erdos_renyi, build_index, walk_count_dp
         from repro.distributed.engine import DistributedPathEnum
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         g = erdos_renyi(60, 4.0, seed=5)
         k = 4
         eng = DistributedPathEnum(mesh, g, k)
@@ -87,8 +87,8 @@ def test_compressed_psum_close_to_exact():
         loss_fn = make_loss_fn(cfg)
         toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 64)
         batch = {"tokens": toks, "labels": toks}
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         f = make_compressed_grad_fn(loss_fn, mesh)
         loss, grads = f(params, batch)
         # exact reference
@@ -124,14 +124,14 @@ def test_sharded_train_step_runs_and_matches_single_device():
         batch = {"tokens": toks, "labels": toks}
         ts = make_train_step(cfg, ocfg)
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh, set_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = S.ShardingRules(mesh)
         pspecs = S.tree_specs(params, rules.param_spec)
         psh = S.tree_shardings(mesh, pspecs)
         osh = S.tree_shardings(mesh, S.opt_shardings(pspecs, opt))
         bsh = S.tree_shardings(mesh, S.tree_specs(batch, rules.batch_spec))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jf = jax.jit(ts, in_shardings=(psh, osh, bsh),
                          out_shardings=(psh, osh, None))
             p1, o1, m1 = jf(params, opt, batch)
@@ -154,8 +154,8 @@ def test_sharding_rules_divisibility_properties():
         from repro.configs import ARCH_IDS, get_arch
         from repro.distributed import sharding as S
         from repro.launch import specs as sp
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = S.ShardingRules(mesh)
         bad = []
         for arch in ARCH_IDS:
@@ -198,14 +198,14 @@ def test_seq_shard_activations_numerically_identical():
         ocfg = adamw.OptimizerConfig(total_steps=5)
         toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 128)
         batch = {"tokens": toks, "labels": toks}
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh, set_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = S.ShardingRules(mesh)
         pspecs = S.tree_specs(params, rules.param_spec)
         psh = S.tree_shardings(mesh, pspecs)
         osh = S.tree_shardings(mesh, S.opt_shardings(pspecs, opt))
         bsh = S.tree_shardings(mesh, S.tree_specs(batch, rules.batch_spec))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             losses = []
             for cfg in (base, sp):
                 ts = make_train_step(cfg, ocfg)

@@ -68,10 +68,43 @@ def test_first_n_is_prefix_and_fast_path():
     eng = PathEnum()
     full = eng.query(g, s, t, k, mode="dfs")
     part = eng.query(g, s, t, k, mode="dfs", first_n=10)
-    assert part.result.count >= 10
+    assert part.result.count == 10
+    assert part.result.paths.shape[0] == 10
     assert not part.result.exhausted
     got = set(part.result.as_tuples())
     assert got.issubset(set(full.result.as_tuples()))
+
+
+def test_first_n_on_join_path_matches_dfs():
+    """Regression: first_n used to be dropped whenever the join plan ran —
+    mode="join" (and auto→join) enumerated the full result set."""
+    g = GRAPHS["er_dense"]
+    eng = PathEnum()
+    for (s, t) in queries_for(g, 3, seed=11):
+        total = eng.count(g, s, t, 5, mode="dfs")
+        full_set = set(eng.query(g, s, t, 5, mode="dfs").result.as_tuples())
+        for n in (1, 7, total + 10):
+            dfs = eng.query(g, s, t, 5, mode="dfs", first_n=n).result
+            join = eng.query(g, s, t, 5, mode="join", first_n=n).result
+            want = min(n, total)
+            assert dfs.count == join.count == want
+            assert join.paths.shape[0] == want
+            assert join.exhausted == (total < n)
+            assert set(join.as_tuples()).issubset(full_set)
+
+
+def test_first_n_when_auto_planner_selects_join():
+    g = GRAPHS["er_dense"]
+    eng = PathEnum(tau=0.0)  # skip the preliminary fast path: plan via DP
+    hit_join = False
+    for (s, t) in queries_for(g, 8, seed=7):
+        out = eng.query(g, s, t, 5, mode="auto", first_n=5)
+        if out.plan.method == "join":
+            hit_join = True
+            total = eng.count(g, s, t, 5, mode="dfs")
+            assert out.result.count == min(5, total)
+            assert out.result.paths.shape[0] == out.result.count
+    assert hit_join, "no auto query exercised the join plan"
 
 
 def test_count_only_matches_materialized():

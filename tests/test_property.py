@@ -102,3 +102,22 @@ def test_first_n_returns_at_least_n_or_all(gq, n):
         assert got.count >= n
     else:
         assert got.count == total
+
+
+@settings(max_examples=15, deadline=None)
+@given(graph_query(), st.integers(1, 50))
+def test_first_n_dfs_join_consistent(gq, n):
+    """Response-time mode truncates identically on both plans: exactly
+    min(n, total) results, same exhausted flag, all drawn from P(s,t,k)."""
+    g, s, t, k = gq
+    idx = build_index(g, s, t, k)
+    total = enumerate_paths_idx(idx, count_only=True).count
+    dfs = enumerate_paths_idx(idx, first_n=n)
+    join = enumerate_paths_join(idx, cut=max(1, k // 2), first_n=n)
+    want = min(n, total)
+    assert dfs.count == join.count == want
+    assert dfs.paths.shape[0] == want and join.paths.shape[0] == want
+    assert dfs.exhausted == join.exhausted == (total < n)
+    full = set(enumerate_paths_idx(idx).as_tuples())
+    assert set(dfs.as_tuples()) <= full
+    assert set(join.as_tuples()) <= full
