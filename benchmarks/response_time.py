@@ -1,0 +1,132 @@
+"""fig_response_time — p50/p99 time-to-first-n under open-loop arrivals.
+
+The paper's online metric (§7.1) is response time: how fast the first
+results reach the client, not how fast the whole batch drains.  This
+suite replays one open-loop workload — arrival times drawn up front,
+independent of server progress, the standard way to expose queueing
+delay — against both HcPE front-ends:
+
+  * sync ``HcPEServer``: a greedy drain loop (serve whatever has arrived,
+    block until done); a heavy analytics query stalls everything behind it.
+  * async ``AsyncHcPEServer``: deadline-aware micro-batching + EDF, so
+    tight-SLO interactive queries jump the heavy one.
+
+Interactive queries use first_n (the first-results contract); the heavy
+query enumerates in full.  Reported per class and front-end: p50/p99
+completion latency, plus the async SLO hit-rate.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import BatchPathEnum, erdos_renyi
+from repro.serving import AsyncHcPEServer, HcPEServer, PathQueryRequest
+
+FIRST_N = 100          # the paper's first-1000, scaled to benchmark size
+LIGHT_SLO_MS = 50.0
+
+
+def _workload(rng, g, n_light=24, n_heavy=2):
+    """(arrival_offset_s, request) pairs — arrivals fixed up front."""
+    events: List[Tuple[float, PathQueryRequest]] = []
+    t = 0.0
+    uid = 0
+    for i in range(n_light + n_heavy):
+        t += float(rng.exponential(0.012))
+        heavy = i % (n_light // n_heavy + 1) == (n_light // n_heavy)
+        if heavy:
+            req = PathQueryRequest(uid=uid, s=0, t=1, k=8,
+                                   deadline_ms=60_000.0)
+        else:
+            s, d = rng.integers(0, g.n, 2)
+            while s == d:
+                s, d = rng.integers(0, g.n, 2)
+            req = PathQueryRequest(uid=uid, s=int(s), t=int(d), k=3,
+                                   count_only=False, first_n=FIRST_N,
+                                   deadline_ms=LIGHT_SLO_MS)
+        events.append((t, req))
+        uid += 1
+    return events
+
+
+def _run_sync(g, events):
+    """Greedy drain loop: serve every arrived request, block, repeat."""
+    server = HcPEServer(g, BatchPathEnum())
+    t0 = time.perf_counter()
+    done: dict = {}
+    i = 0
+    while i < len(events):
+        now = time.perf_counter() - t0
+        batch = []
+        while i < len(events) and events[i][0] <= now:
+            batch.append(events[i][1])
+            i += 1
+        if not batch:
+            time.sleep(max(events[i][0] - now, 0.0))
+            continue
+        resps, _ = server.serve(batch)
+        end = time.perf_counter() - t0
+        for req, resp in zip(batch, resps):
+            arrival = next(a for a, r in events if r.uid == req.uid)
+            done[req.uid] = (end - arrival, resp)
+    return done
+
+
+async def _run_async(g, events):
+    done: dict = {}
+    async with AsyncHcPEServer(g, BatchPathEnum(),
+                               batch_window_ms=2.0) as server:
+        t0 = time.perf_counter()
+
+        async def one(arrival, req):
+            await asyncio.sleep(max(arrival - (time.perf_counter() - t0), 0))
+            resp = await server.submit(req)
+            done[req.uid] = (time.perf_counter() - t0 - arrival, resp)
+
+        await asyncio.gather(*(one(a, r) for a, r in events))
+    return done
+
+
+def _rows(prefix, events, done):
+    rows = []
+    for cls, pick in (("light", lambda r: r.first_n is not None),
+                      ("heavy", lambda r: r.first_n is None)):
+        lats = [done[r.uid][0] * 1e3 for _, r in events if pick(r)]
+        rows.append((f"fig_response_time/{prefix}/{cls}_p50_ms",
+                     float(np.percentile(lats, 50)), f"n={len(lats)}"))
+        rows.append((f"fig_response_time/{prefix}/{cls}_p99_ms",
+                     float(np.percentile(lats, 99)),
+                     f"time-to-first-{FIRST_N}" if cls == "light" else "full"))
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    g = erdos_renyi(200, 12.0, seed=3)
+    rng = np.random.default_rng(42)
+    events = _workload(rng, g)
+
+    sync_done = _run_sync(g, events)
+    async_done = asyncio.run(_run_async(g, events))
+
+    # both engines, cold caches each: counts must agree before timings mean
+    # anything
+    mismatch = [u for u in sync_done
+                if sync_done[u][1].count != async_done[u][1].count]
+    if mismatch:
+        raise AssertionError(f"count mismatch sync vs async: {mismatch}")
+
+    rows = _rows("sync", events, sync_done) + _rows("async", events, async_done)
+    lights = [r for _, r in events if r.first_n is not None]
+    met = sum(1 for r in lights if async_done[r.uid][1].slo_met)
+    rows.append(("fig_response_time/async/light_slo_hit_rate",
+                 met / len(lights), f"slo={LIGHT_SLO_MS}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")

@@ -25,6 +25,8 @@ def main() -> None:
         suites.append((fn.__name__, fn))
     from . import scalability
     suites.append(("fig12_scalability", scalability.run))
+    from . import response_time
+    suites.append(("fig_response_time", response_time.run))
     suites.append(("kernels", kernels_bench.run))
     suites.append(("roofline", roofline.run))
     if not args.skip_collectives:

@@ -1,4 +1,4 @@
-"""Batch HcPE serving demo: dedup + warm index cache on an online workload.
+"""Batch **HcPE** serving demo: dedup + warm index cache, sync front-end.
 
     PYTHONPATH=src python examples/batch_serving.py
 
@@ -6,6 +6,13 @@ Builds a hub-heavy graph, simulates a production query log (many requests
 hitting a small set of hot s-t pairs), serves it twice through HcPEServer
 and prints the serving report — throughput, latency percentiles, and the
 index-cache reuse that makes the second batch cheap.
+
+Not to be confused with its two similarly-named siblings:
+  * examples/serve_batch.py — **LM decode** serving (continuous batching
+    over decode slots, serving/engine.py); no path queries involved.
+  * examples/async_serving.py — the **async** HcPE front-end
+    (AsyncHcPEServer: admission control + deadline-aware micro-batching)
+    layered over the same engine this demo drives synchronously.
 """
 import numpy as np
 

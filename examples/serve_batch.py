@@ -1,6 +1,13 @@
-"""Batched serving example (continuous batching over decode slots).
+"""**LM decode** serving example (continuous batching over decode slots).
 
     PYTHONPATH=src python examples/serve_batch.py
+
+This drives the language-model serving engine (serving/engine.py) via
+repro.launch.serve — it has nothing to do with path queries.  For HcPE
+query serving see the similarly-named siblings:
+  * examples/batch_serving.py — sync HcPE batch front-end (HcPEServer).
+  * examples/async_serving.py — async deadline-aware HcPE front-end
+    (AsyncHcPEServer).
 """
 import subprocess, sys, os
 subprocess.run([sys.executable, "-m", "repro.launch.serve",

@@ -117,7 +117,10 @@ class IndexCache:
         self._entries[key] = idx
 
     def clear(self) -> None:
+        """Drop all entries and reset stats — a fresh-cache baseline, so
+        post-clear hit/miss/eviction counters describe only the new epoch."""
         self._entries.clear()
+        self.stats = CacheStats()
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +228,11 @@ class BatchTiming:
     optimize_seconds: float = 0.0
     enumerate_seconds: float = 0.0
     total_seconds: float = 0.0
+    # wall-clock span of the batch in time.perf_counter() coordinates;
+    # lets concurrent batches merge as max-of-overlapping rather than a
+    # sum (serving/hcpe._merge_outputs).  0.0 = span unknown.
+    started_at: float = 0.0
+    ended_at: float = 0.0
 
 
 @dataclasses.dataclass
@@ -333,21 +341,33 @@ class BatchPathEnum:
 
     # -- enumeration --------------------------------------------------------
     def _enumerate(self, idx: LightweightIndex, plan: Plan, count_only: bool,
-                   first_n: Optional[int]) -> EnumResult:
+                   first_n: Optional[int],
+                   deadline: Optional[float]) -> EnumResult:
         if plan.method == "dfs":
             return enumerate_paths_idx(idx, chunk_size=self.engine.chunk_size,
-                                       count_only=count_only, first_n=first_n)
+                                       count_only=count_only, first_n=first_n,
+                                       deadline=deadline)
         return enumerate_paths_join(idx, cut=plan.cut, count_only=count_only,
                                     first_n=first_n,
-                                    max_partials=self.engine.max_partials)
+                                    max_partials=self.engine.max_partials,
+                                    deadline=deadline)
 
     def run(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
             count_only: bool = True, first_n: Optional[int] = None,
             mode: str = "auto", edge_mask: Optional[np.ndarray] = None,
+            deadline: Optional[float] = None,
             _precomputed_distances: Optional[Dict[QueryKey, Tuple[np.ndarray,
                                                                   np.ndarray]]] = None,
             ) -> BatchOutput:
         """Serve a batch; returns per-query items in input order.
+
+        ``deadline`` (absolute ``time.perf_counter()``) is the batch's
+        cooperative stop: enumeration halts at the next chunk boundary
+        after it passes, queries not yet enumerated return empty with
+        ``exhausted=False``, and everything already emitted is kept.  The
+        index/planner phases are not interrupted (they are the cheap,
+        bounded part of the pipeline); only chunked enumeration — where
+        the unbounded work lives — honors the budget.
 
         ``_precomputed_distances`` is the distributed hand-off: the mesh BFS
         of distributed/engine.py injects (dist_s, dist_t) per key so the
@@ -392,7 +412,7 @@ class BatchPathEnum:
                 raise ValueError(f"unknown mode {mode!r}")
             timing.optimize_seconds += plan.optimize_seconds
             t1 = time.perf_counter()
-            res = self._enumerate(idx, plan, count_only, first_n)
+            res = self._enumerate(idx, plan, count_only, first_n, deadline)
             timing.enumerate_seconds += time.perf_counter() - t1
             item = BatchItem(s=key[0], t=key[1], k=key[2], result=res,
                              plan=plan, index_cached=was_cached,
@@ -401,7 +421,9 @@ class BatchPathEnum:
             memo[key] = item
             items[pos] = item
 
-        timing.total_seconds = time.perf_counter() - t_batch
+        timing.started_at = t_batch
+        timing.ended_at = time.perf_counter()
+        timing.total_seconds = timing.ended_at - t_batch
         return BatchOutput(items=list(items), timing=timing,  # type: ignore[arg-type]
                            cache_stats=self.cache.stats.delta(stats_before),
                            distinct_queries=len(memo))

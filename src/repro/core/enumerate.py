@@ -19,6 +19,7 @@ dup-pruned expansions plus dead-end rows), #results.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -107,11 +108,19 @@ def enumerate_paths_idx(
     first_n: Optional[int] = None,
     max_results: Optional[int] = None,
     constraint=None,
+    deadline: Optional[float] = None,
 ) -> EnumResult:
     """Enumerate P(s,t,k,G) from the light-weight index (Algorithm 4).
 
     ``constraint`` is an optional Appendix-E extension object (see
     constraints.py) carrying vectorized per-partial state.
+
+    ``deadline`` is a cooperative chunk budget: an absolute
+    ``time.perf_counter()`` timestamp checked between chunks.  Once it
+    passes, the results emitted so far come back with ``exhausted=False``
+    — the anytime contract of ``first_n``, keyed on time instead of
+    count.  Emitted results are never discarded, so the return value is
+    always a correct (possibly partial) subset of the full result set.
     """
     k, s, t = idx.k, idx.s, idx.t
     stats = EnumStats()
@@ -126,6 +135,9 @@ def enumerate_paths_idx(
     work: List[Tuple[np.ndarray, int, object]] = [(root, 0, cstate0)]
 
     while work:
+        if deadline is not None and time.perf_counter() >= deadline:
+            return _finalize(idx, out_paths, out_lens, count, stats,
+                             exhausted=False)
         paths, depth, cstate = work.pop()
         stats.chunks += 1
         expanded = _expand_chunk(idx, paths, depth, stats)

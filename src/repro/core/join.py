@@ -16,6 +16,7 @@ path when performing the join operation").
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -89,6 +90,7 @@ def enumerate_paths_join(
     max_partials: Optional[int] = None,
     max_results: Optional[int] = None,
     constraint=None,
+    deadline: Optional[float] = None,
 ) -> EnumResult:
     """Algorithm 6 with cut position ``cut`` (i*).
 
@@ -96,11 +98,22 @@ def enumerate_paths_join(
     halves are still evaluated in full (the join needs them), but emission
     stops after exactly ``first_n`` results with ``exhausted=False`` — the
     same truncation contract as enumerate_paths_idx.
+
+    ``deadline`` (absolute ``time.perf_counter()``) is the cooperative
+    time analogue, checked at the join's natural chunk boundaries: before
+    each half expansion and between cut-key groups.  Past it, the paths
+    joined so far return with ``exhausted=False``.
     """
     k, s, t = idx.k, idx.s, idx.t
     if not 0 < cut < k:
         raise ValueError(f"cut must be in (0, k), got {cut}")
     stats = JoinStats()
+
+    def _expired() -> bool:
+        return deadline is not None and time.perf_counter() >= deadline
+
+    if _expired():
+        return _finalize(idx, [], [], 0, stats, exhausted=False)
 
     # R_a = Q[0:cut]: tuples of cut+1 vertices starting at s (position 0)
     ra = _expand_to_width(idx, np.array([s], np.int32), 0, cut + 1, stats,
@@ -108,6 +121,8 @@ def enumerate_paths_join(
     stats.ra_size = ra.shape[0]
     if ra.shape[0] == 0:
         return _finalize(idx, [], [], 0, stats, exhausted=True)
+    if _expired():
+        return _finalize(idx, [], [], 0, stats, exhausted=False)
 
     # C = join keys realized in R_a (Alg. 6 L3)
     keys = np.unique(ra[:, cut])
@@ -135,6 +150,9 @@ def enumerate_paths_join(
 
     A_BLOCK = 256  # bound the (na_blk, nb, cut, k-cut) clash tensor
     for ki in range(keys.shape[0]):
+        if _expired():
+            return _finalize(idx, out_paths, out_lens, count, stats,
+                             exhausted=False)
         na, nb = a_end[ki] - a_start[ki], b_end[ki] - b_start[ki]
         if na == 0 or nb == 0:
             continue

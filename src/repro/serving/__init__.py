@@ -1,9 +1,14 @@
-"""Serving layer: continuous-batching LM decode (engine.py) and the HcPE
-batch query front-end (hcpe.py) — DESIGN.md §4."""
+"""Serving layer: continuous-batching LM decode (engine.py), the HcPE
+batch query front-end (hcpe.py, DESIGN.md §4), and the async
+deadline-aware HcPE front-end (async_server.py, DESIGN.md §7)."""
 
 from . import engine  # noqa: F401
+from .async_server import AsyncHcPEServer, AsyncServeStats
 from .hcpe import (BatchServeReport, HcPEServer, PathQueryRequest,
-                   PathQueryResponse)
+                   PathQueryResponse, STATUS_OK, STATUS_REJECTED_QUEUE_FULL,
+                   STATUS_REJECTED_QUOTA, STATUS_REJECTED_SHUTDOWN)
 
 __all__ = ["engine", "HcPEServer", "PathQueryRequest", "PathQueryResponse",
-           "BatchServeReport"]
+           "BatchServeReport", "AsyncHcPEServer", "AsyncServeStats",
+           "STATUS_OK", "STATUS_REJECTED_QUEUE_FULL", "STATUS_REJECTED_QUOTA",
+           "STATUS_REJECTED_SHUTDOWN"]

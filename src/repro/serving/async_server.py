@@ -1,0 +1,337 @@
+"""Async deadline-aware HcPE serving front-end (DESIGN.md §7).
+
+The paper's headline metric is *response time* — time to the first 1000
+results under an online workload (§7.1) — but ``HcPEServer.serve`` is a
+blocking batch call: one heavy (s, t, k) query stalls every request
+queued behind it.  This module puts an asyncio front-end over the same
+``BatchPathEnum`` engine:
+
+  * **request queue + admission control** — ``submit`` bounds the queue
+    (``max_queue_depth``) and the per-uid in-flight count
+    (``max_pending_per_uid``); rejected requests get an explicit
+    ``PathQueryResponse`` status (hcpe.STATUS_REJECTED_*), never an
+    exception, so clients can tell shed load from a crashed server.
+  * **deadline-aware micro-batching** — accepted requests accumulate for
+    a batching window, then coalesce into engine batches of identical
+    ``(count_only, first_n)`` serving options (the same grouping rule as
+    ``HcPEServer.serve``, via the shared ``hcpe.group_requests``
+    contract) *and* nearby deadlines (``deadline_slack_ms``), the
+    deadline-grouped micro-batching of batch-HcPE serving
+    (arXiv:2312.01424).
+  * **earliest-deadline-first dispatch** — the pending set is re-sorted
+    by absolute deadline before every micro-batch, so a tight-SLO query
+    that arrives while a batch is in flight jumps everything looser the
+    moment the worker frees up.
+  * **non-blocking service** — each micro-batch runs in a worker thread
+    via ``asyncio.to_thread``; the event loop keeps accepting (and
+    rejecting) requests while enumeration is busy.
+
+Every response carries the queue/service/total latency split and an
+``slo_met`` flag.  With ``enforce_deadlines=True`` the group's deadline
+is also handed to ``BatchPathEnum.run`` as the cooperative enumeration
+budget (core/batch.py), so an in-flight batch stops at the next chunk
+boundary past its deadline and reports ``exhausted=False`` — the anytime
+contract of ``first_n`` (ranked-enumeration style, arXiv:1911.05582),
+keyed on time.  Left off (the default), deadlines shape *scheduling
+order and reporting only* and results stay byte-identical to the sync
+engine.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import itertools
+import math
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from ..core.batch import BatchOutput, BatchPathEnum
+from ..core.graph import Graph
+from .hcpe import (BatchServeReport, PathQueryRequest, PathQueryResponse,
+                   STATUS_REJECTED_QUEUE_FULL, STATUS_REJECTED_QUOTA,
+                   STATUS_REJECTED_SHUTDOWN, _merge_outputs,
+                   rejection_response, request_group_key, response_from_item)
+
+
+@dataclasses.dataclass
+class AsyncServeStats:
+    """Counters over the server's lifetime (admission + SLO outcomes)."""
+    submitted: int = 0
+    accepted: int = 0
+    completed: int = 0
+    rejected_queue_full: int = 0
+    rejected_quota: int = 0
+    rejected_shutdown: int = 0
+    micro_batches: int = 0
+    slo_met: int = 0
+    slo_missed: int = 0
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: PathQueryRequest
+    enqueued_at: float                 # perf_counter at admission
+    deadline_at: Optional[float]       # absolute perf_counter; None = no SLO
+    seq: int                           # arrival order, the EDF tiebreak
+    future: "asyncio.Future[PathQueryResponse]"
+
+    @property
+    def edf_key(self) -> Tuple[float, int]:
+        return (self.deadline_at if self.deadline_at is not None else math.inf,
+                self.seq)
+
+
+class AsyncHcPEServer:
+    """Asyncio front-end over one graph + one ``BatchPathEnum`` engine.
+
+    Usage::
+
+        async with AsyncHcPEServer(graph) as server:
+            resp = await server.submit(PathQueryRequest(uid=0, s=3, t=9, k=4,
+                                                        deadline_ms=50.0))
+
+    The engine — and therefore the index LRU — is shared across all
+    micro-batches, exactly as it is across ``HcPEServer.serve`` calls.
+
+    Parameters
+    ----------
+    batch_window_ms:
+        How long the scheduler lets a micro-batch accumulate after work
+        becomes available, trading first-request latency for batch
+        sharing (dedup / stacked BFS).
+    max_queue_depth:
+        Admission bound on requests queued or in flight; past it,
+        ``submit`` resolves immediately to STATUS_REJECTED_QUEUE_FULL.
+    max_pending_per_uid:
+        Per-uid (tenant) in-flight quota → STATUS_REJECTED_QUOTA.
+    deadline_slack_ms:
+        Two requests share a micro-batch only if their absolute deadlines
+        are within this slack (and their serving options match) — keeps a
+        loose-deadline heavy query from riding in a tight group, whose
+        members would otherwise wait on it.
+    default_deadline_ms:
+        Applied to requests that carry no ``deadline_ms``; ``None`` means
+        such requests have no deadline (they schedule last, FIFO).
+    enforce_deadlines:
+        Hand each group's deadline to the engine as a cooperative stop
+        (truncated results, ``exhausted=False``).  Off by default: then
+        deadlines order the work and grade SLOs, but never change results.
+    """
+
+    def __init__(self, graph: Graph, engine: Optional[BatchPathEnum] = None,
+                 *, batch_window_ms: float = 2.0, max_queue_depth: int = 1024,
+                 max_pending_per_uid: int = 256,
+                 deadline_slack_ms: float = 25.0,
+                 default_deadline_ms: Optional[float] = None,
+                 enforce_deadlines: bool = False,
+                 report_capacity: int = 256):
+        self.graph = graph
+        self.engine = engine or BatchPathEnum()
+        self.batch_window_ms = batch_window_ms
+        self.max_queue_depth = max_queue_depth
+        self.max_pending_per_uid = max_pending_per_uid
+        self.deadline_slack_ms = deadline_slack_ms
+        self.default_deadline_ms = default_deadline_ms
+        self.enforce_deadlines = enforce_deadlines
+        self.stats = AsyncServeStats()
+        self._pending: List[_Pending] = []
+        self._inflight = 0                 # admitted, response not yet sent
+        self._per_uid: Dict[int, int] = {}
+        self._seq = itertools.count()
+        # drain_report's source, capped: count_only=False outputs hold the
+        # full path arrays, so an undrained server must not retain every
+        # micro-batch forever — past capacity the oldest outputs fall off
+        self._outputs: Deque[BatchOutput] = collections.deque(
+            maxlen=report_capacity)
+        self._wakeup: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._closing = False
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> None:
+        if self._task is not None:
+            raise RuntimeError("server already started")
+        self._closing = False
+        self._wakeup = asyncio.Event()
+        self._task = asyncio.create_task(self._scheduler())
+
+    async def stop(self) -> None:
+        """Drain the queue (every admitted request gets its response),
+        then stop the scheduler.  Submissions after stop() begins resolve
+        to STATUS_REJECTED_SHUTDOWN."""
+        if self._task is None:
+            return
+        self._closing = True
+        self._wakeup.set()
+        await self._task
+        self._task = None
+
+    async def __aenter__(self) -> "AsyncHcPEServer":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- submission ---------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return self._inflight
+
+    async def submit(self, req: PathQueryRequest) -> PathQueryResponse:
+        """Admit one request and await its response.
+
+        Admission failures *return* a rejection response; malformed
+        queries (k < 2, s == t) raise ValueError like the engine would.
+        """
+        if self._task is None:
+            raise RuntimeError("server not started (use `async with` or "
+                               "await start())")
+        # full validation up front: a malformed query must fail its own
+        # submit, never reach engine.run and poison an entire micro-batch
+        if req.k < 2:
+            raise ValueError("paper assumes k >= 2")
+        if req.s == req.t:
+            raise ValueError("s and t must be distinct")
+        if not (0 <= req.s < self.graph.n and 0 <= req.t < self.graph.n):
+            raise ValueError(f"s/t out of range for graph with n={self.graph.n}")
+        self.stats.submitted += 1
+        if self._closing:
+            self.stats.rejected_shutdown += 1
+            return self._rejected(req, STATUS_REJECTED_SHUTDOWN)
+        if self._inflight >= self.max_queue_depth:
+            self.stats.rejected_queue_full += 1
+            return self._rejected(req, STATUS_REJECTED_QUEUE_FULL)
+        if self._per_uid.get(req.uid, 0) >= self.max_pending_per_uid:
+            self.stats.rejected_quota += 1
+            return self._rejected(req, STATUS_REJECTED_QUOTA)
+
+        now = time.perf_counter()
+        dl_ms = (req.deadline_ms if req.deadline_ms is not None
+                 else self.default_deadline_ms)
+        pending = _Pending(
+            req=req, enqueued_at=now,
+            deadline_at=now + dl_ms / 1e3 if dl_ms is not None else None,
+            seq=next(self._seq),
+            future=asyncio.get_running_loop().create_future())
+        self.stats.accepted += 1
+        self._inflight += 1
+        self._per_uid[req.uid] = self._per_uid.get(req.uid, 0) + 1
+        self._pending.append(pending)
+        self._wakeup.set()
+        return await pending.future
+
+    def _rejected(self, req: PathQueryRequest,
+                  status: str) -> PathQueryResponse:
+        """A rejection response, with the SLO counters kept in agreement:
+        a shed deadline-carrying request is a missed SLO in the stats,
+        exactly as its response reports."""
+        resp = rejection_response(req, status)
+        if resp.slo_met is False:
+            self.stats.slo_missed += 1
+        return resp
+
+    async def serve(self, requests: Sequence[PathQueryRequest],
+                    ) -> List[PathQueryResponse]:
+        """Burst-submit a batch and gather responses in request order —
+        the async mirror of ``HcPEServer.serve`` (sans report)."""
+        return list(await asyncio.gather(*(self.submit(r) for r in requests)))
+
+    def drain_report(self) -> BatchServeReport:
+        """Merge (and clear) the engine outputs accumulated since the last
+        call — at most the ``report_capacity`` most recent micro-batches —
+        into one ``BatchServeReport``; concurrent spans merge as
+        max-of-overlapping wall time (hcpe._merge_outputs)."""
+        outputs = list(self._outputs)
+        self._outputs.clear()
+        return BatchServeReport.from_output(_merge_outputs(outputs))
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _pop_edf_group(self) -> List[_Pending]:
+        """Remove and return the next micro-batch: the earliest-deadline
+        request plus every pending request with the same serving options
+        whose deadline is within ``deadline_slack_ms`` of it."""
+        self._pending.sort(key=lambda p: p.edf_key)
+        head = self._pending[0]
+        opts = request_group_key(head.req)
+        slack = self.deadline_slack_ms / 1e3
+        group: List[_Pending] = []
+        rest: List[_Pending] = []
+        for p in self._pending:
+            close = (head.deadline_at is None if p.deadline_at is None
+                     else (head.deadline_at is not None
+                           and p.deadline_at - head.deadline_at <= slack))
+            if request_group_key(p.req) == opts and close:
+                group.append(p)
+            else:
+                rest.append(p)
+        self._pending = rest
+        return group
+
+    async def _scheduler(self) -> None:
+        while True:
+            if not self._pending:
+                if self._closing:
+                    return
+                self._wakeup.clear()
+                await self._wakeup.wait()
+                continue
+            if self.batch_window_ms > 0:
+                # let the micro-batch fill; new arrivals during the window
+                # (and during service below) join the EDF sort next round
+                await asyncio.sleep(self.batch_window_ms / 1e3)
+            while self._pending:
+                await self._serve_group(self._pop_edf_group())
+
+    async def _serve_group(self, group: List[_Pending]) -> None:
+        self.stats.micro_batches += 1
+        count_only, first_n = group[0].req.count_only, group[0].req.first_n
+        deadline = None
+        if self.enforce_deadlines:
+            deadlines = [p.deadline_at for p in group]
+            if all(d is not None for d in deadlines):
+                # the group's deadline: when its last member's SLO expires
+                deadline = max(deadlines)
+        queries = [(p.req.s, p.req.t, p.req.k) for p in group]
+        dispatched = time.perf_counter()
+        try:
+            out = await asyncio.to_thread(
+                self.engine.run, self.graph, queries, count_only=count_only,
+                first_n=first_n, deadline=deadline)
+        except BaseException as exc:  # engine bug: fail the group, not the loop
+            for p in group:
+                if not p.future.done():
+                    p.future.set_exception(exc)
+                self._settle(p)
+            return
+        done = time.perf_counter()
+        self._outputs.append(out)
+        for p, item in zip(group, out.items):
+            if p.future.done():      # submit cancelled (e.g. wait_for timeout)
+                self._settle(p)      # — drop the response, keep the scheduler
+                continue
+            resp = response_from_item(p.req, item)
+            resp.queue_ms = (dispatched - p.enqueued_at) * 1e3
+            resp.service_ms = (done - dispatched) * 1e3
+            resp.total_ms = (done - p.enqueued_at) * 1e3
+            if p.deadline_at is not None:
+                resp.slo_met = done <= p.deadline_at
+                if resp.slo_met:
+                    self.stats.slo_met += 1
+                else:
+                    self.stats.slo_missed += 1
+            self.stats.completed += 1
+            p.future.set_result(resp)
+            self._settle(p)
+
+    def _settle(self, p: _Pending) -> None:
+        self._inflight -= 1
+        left = self._per_uid.get(p.req.uid, 0) - 1
+        if left > 0:
+            self._per_uid[p.req.uid] = left
+        else:
+            self._per_uid.pop(p.req.uid, None)

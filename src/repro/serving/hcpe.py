@@ -12,23 +12,42 @@ serving analogue with continuous batching lives in serving/engine.py.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.batch import BatchOutput, BatchPathEnum, BatchTiming, CacheStats
+from ..core.batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
+                          CacheStats)
 from ..core.graph import Graph
+
+
+# Response statuses.  Rejections are *responses*, not exceptions: an
+# admission-controlled server must answer every request it saw, and a
+# client telling rejected from crashed needs the distinction in-band.
+STATUS_OK = "ok"
+STATUS_REJECTED_QUEUE_FULL = "rejected_queue_full"
+STATUS_REJECTED_QUOTA = "rejected_quota"
+STATUS_REJECTED_SHUTDOWN = "rejected_shutdown"
 
 
 @dataclasses.dataclass
 class PathQueryRequest:
-    """One HcPE query q(s, t, k) plus serving options."""
+    """One HcPE query q(s, t, k) plus serving options.
+
+    ``deadline_ms`` is the per-request SLO (relative to submission).  The
+    sync server ignores it; the async front-end (async_server.py) uses it
+    for earliest-deadline-first scheduling and the ``slo_met`` flag, and —
+    when deadline enforcement is on — as the cooperative enumeration
+    budget of its micro-batch.
+    """
     uid: int
     s: int
     t: int
     k: int
     count_only: bool = True
     first_n: Optional[int] = None     # response-time mode: first-n results
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -39,7 +58,18 @@ class PathQueryResponse:
     plan_method: str
     index_cached: bool                # served off the warm index LRU
     deduplicated: bool                # shared an identical in-batch query
-    latency_ms: float
+    latency_ms: float                 # attributable engine work for this query
+    exhausted: bool = True            # False: truncated by first_n / deadline
+    status: str = STATUS_OK
+    # end-to-end latency split (async front-end; sync leaves queue at 0)
+    queue_ms: float = 0.0             # submission -> micro-batch dispatch
+    service_ms: float = 0.0           # dispatch -> response ready
+    total_ms: float = 0.0             # submission -> response ready
+    slo_met: Optional[bool] = None    # None: request carried no deadline
+
+    @property
+    def rejected(self) -> bool:
+        return self.status != STATUS_OK
 
 
 @dataclasses.dataclass
@@ -70,13 +100,66 @@ class BatchServeReport:
                    p99_ms=pct["p99_ms"], cache=out.cache_stats)
 
 
+# ---------------------------------------------------------------------------
+# Grouping / response assembly — one code path shared by the sync server
+# below and the async front-end (async_server.py)
+# ---------------------------------------------------------------------------
+
+GroupKey = Tuple[bool, Optional[int]]  # (count_only, first_n)
+
+
+def request_group_key(req: PathQueryRequest) -> GroupKey:
+    """The engine-batch compatibility key: requests sharing it can be
+    served by one ``BatchPathEnum.run`` call (the engine takes
+    count_only / first_n per batch, not per query).  Both front-ends
+    derive their grouping from this one function — extend it here, never
+    inline."""
+    return (req.count_only, req.first_n)
+
+
+def group_requests(requests: Sequence[PathQueryRequest],
+                   ) -> Dict[GroupKey, List[int]]:
+    """Positions of ``requests`` grouped by their serving options;
+    positions let the caller reassemble responses in request order."""
+    groups: Dict[GroupKey, List[int]] = {}
+    for pos, req in enumerate(requests):
+        groups.setdefault(request_group_key(req), []).append(pos)
+    return groups
+
+
+def response_from_item(req: PathQueryRequest,
+                       item: BatchItem) -> PathQueryResponse:
+    """Fold one engine ``BatchItem`` into the wire response for ``req``."""
+    return PathQueryResponse(
+        uid=req.uid, count=item.result.count,
+        paths=None if req.count_only else item.result.paths,
+        plan_method=item.plan.method,
+        index_cached=item.index_cached,
+        deduplicated=item.deduplicated,
+        latency_ms=item.latency_seconds * 1e3,
+        exhausted=item.result.exhausted)
+
+
+def rejection_response(req: PathQueryRequest, status: str,
+                       queue_ms: float = 0.0) -> PathQueryResponse:
+    """An admission-control rejection as a well-formed response."""
+    slo_met = False if req.deadline_ms is not None else None
+    return PathQueryResponse(
+        uid=req.uid, count=0, paths=None, plan_method="none",
+        index_cached=False, deduplicated=False, latency_ms=0.0,
+        exhausted=False, status=status, queue_ms=queue_ms,
+        service_ms=0.0, total_ms=queue_ms, slo_met=slo_met)
+
+
 class HcPEServer:
     """Batch HcPE serving over one graph.
 
     Groups requests by their (count_only, first_n) serving options — each
     group is one BatchPathEnum.run — and reassembles responses in request
     order.  The engine (and therefore the index LRU) is shared across
-    groups and across serve() calls.
+    groups and across serve() calls.  The call blocks until the whole
+    batch finishes; for an online workload with per-request SLOs use
+    ``AsyncHcPEServer`` (async_server.py), which shares these helpers.
     """
 
     def __init__(self, graph: Graph, engine: Optional[BatchPathEnum] = None):
@@ -85,31 +168,35 @@ class HcPEServer:
 
     def serve(self, requests: Sequence[PathQueryRequest],
               ) -> Tuple[List[PathQueryResponse], BatchServeReport]:
-        groups: Dict[Tuple[bool, Optional[int]], List[int]] = {}
-        for pos, req in enumerate(requests):
-            groups.setdefault((req.count_only, req.first_n), []).append(pos)
-
         responses: List[Optional[PathQueryResponse]] = [None] * len(requests)
         outputs: List[BatchOutput] = []
-        for (count_only, first_n), positions in groups.items():
+        for (count_only, first_n), positions in group_requests(requests).items():
             queries = [(requests[p].s, requests[p].t, requests[p].k)
                        for p in positions]
             out = self.engine.run(self.graph, queries, count_only=count_only,
                                   first_n=first_n)
             outputs.append(out)
             for p, item in zip(positions, out.items):
-                responses[p] = PathQueryResponse(
-                    uid=requests[p].uid, count=item.result.count,
-                    paths=None if count_only else item.result.paths,
-                    plan_method=item.plan.method,
-                    index_cached=item.index_cached,
-                    deduplicated=item.deduplicated,
-                    latency_ms=item.latency_seconds * 1e3)
+                resp = response_from_item(requests[p], item)
+                resp.service_ms = resp.total_ms = resp.latency_ms
+                responses[p] = resp
         report = BatchServeReport.from_output(_merge_outputs(outputs))
         # the per-group sum double-counts a (s,t,k) served under several
         # serving options; the request list is the truth
         report.distinct_queries = len({(r.s, r.t, r.k) for r in requests})
         return list(responses), report  # type: ignore[arg-type]
+
+
+def _interval_union_seconds(spans: List[Tuple[float, float]]) -> float:
+    """Total length covered by a set of [start, end] intervals."""
+    total = 0.0
+    hi = -math.inf
+    for start, end in sorted(spans):
+        if end <= hi:
+            continue
+        total += end - max(start, hi)
+        hi = end
+    return total
 
 
 def _merge_outputs(outputs: List[BatchOutput]) -> BatchOutput:
@@ -119,6 +206,17 @@ def _merge_outputs(outputs: List[BatchOutput]) -> BatchOutput:
     well-formed zero output so BatchServeReport.from_output reports
     all-zero percentiles/throughput rather than taking statistics of an
     empty latency list.
+
+    Wall time merges as the *union of the groups' busy intervals* in
+    perf_counter coordinates: concurrent groups (the async scheduler) do
+    not double-count their overlap the way summing per-group walls would,
+    and idle gaps between micro-batches (a drained async server between
+    traffic bursts) are not billed as serving time the way a max-end
+    minus min-start span would.  For back-to-back sequential groups the
+    union equals the sum.  Component times (distance/index/optimize/
+    enumerate) remain sums: they are attributable CPU work, not elapsed
+    time.  Outputs lacking span timestamps (hand-built, e.g. in tests)
+    fall back to the sum.
     """
     if not outputs:
         return BatchOutput(items=[], timing=BatchTiming(),
@@ -133,6 +231,11 @@ def _merge_outputs(outputs: List[BatchOutput]) -> BatchOutput:
         timing.optimize_seconds += o.timing.optimize_seconds
         timing.enumerate_seconds += o.timing.enumerate_seconds
         timing.total_seconds += o.timing.total_seconds
+    if all(o.timing.ended_at > o.timing.started_at > 0.0 for o in outputs):
+        timing.started_at = min(o.timing.started_at for o in outputs)
+        timing.ended_at = max(o.timing.ended_at for o in outputs)
+        timing.total_seconds = _interval_union_seconds(
+            [(o.timing.started_at, o.timing.ended_at) for o in outputs])
     cache = CacheStats()
     for o in outputs:
         cache.hits += o.cache_stats.hits

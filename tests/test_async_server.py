@@ -1,0 +1,342 @@
+"""AsyncHcPEServer: admission, EDF scheduling, deadlines, parity with sync.
+
+No pytest-asyncio dependency: each test drives its own event loop via
+``asyncio.run`` so the suite runs wherever tier-1 runs (the plugin is in
+requirements-dev.txt for authoring convenience, not a test requirement).
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BatchPathEnum, PathEnum, erdos_renyi
+from repro.core.batch import BatchOutput, BatchTiming, CacheStats
+from repro.serving import (AsyncHcPEServer, HcPEServer, PathQueryRequest,
+                           STATUS_OK, STATUS_REJECTED_QUEUE_FULL,
+                           STATUS_REJECTED_QUOTA, STATUS_REJECTED_SHUTDOWN)
+from repro.serving.hcpe import _merge_outputs
+
+
+def _light_requests(g, count, rng, k=3, deadline_ms=None, uid0=0):
+    reqs = []
+    while len(reqs) < count:
+        s, t = rng.integers(0, g.n, 2)
+        if s != t:
+            reqs.append(PathQueryRequest(uid=uid0 + len(reqs), s=int(s),
+                                         t=int(t), k=k,
+                                         deadline_ms=deadline_ms))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# correctness: async == sync == sequential
+# ---------------------------------------------------------------------------
+
+def test_async_counts_match_sync_engine():
+    g = erdos_renyi(80, 4.0, seed=4)
+    rng = np.random.default_rng(0)
+    reqs = _light_requests(g, 12, rng, k=4, deadline_ms=200.0)
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=1.0) as srv:
+            return await srv.serve(reqs)
+
+    resps = asyncio.run(drive())
+    assert [r.uid for r in resps] == [q.uid for q in reqs]
+    seq = PathEnum()
+    for r, q in zip(resps, reqs):
+        assert r.status == STATUS_OK
+        assert r.exhausted
+        assert r.count == seq.count(g, q.s, q.t, q.k)
+
+
+def test_async_latency_split_and_slo_flag():
+    g = erdos_renyi(50, 3.0, seed=1)
+    reqs = [PathQueryRequest(uid=0, s=0, t=1, k=3, deadline_ms=60_000.0),
+            PathQueryRequest(uid=1, s=0, t=2, k=3)]  # no deadline
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=1.0) as srv:
+            return await srv.serve(reqs)
+
+    with_slo, without_slo = asyncio.run(drive())
+    assert with_slo.slo_met is True          # 60 s budget cannot miss
+    assert without_slo.slo_met is None       # no deadline -> not graded
+    for r in (with_slo, without_slo):
+        assert r.queue_ms >= 0.0 and r.service_ms > 0.0
+        assert r.total_ms == pytest.approx(r.queue_ms + r.service_ms,
+                                           rel=1e-6, abs=1e-6)
+
+
+def test_async_dedup_inside_micro_batch():
+    g = erdos_renyi(60, 4.0, seed=2)
+    reqs = [PathQueryRequest(uid=i, s=0, t=1, k=4, deadline_ms=500.0)
+            for i in range(4)]
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=5.0) as srv:
+            return await srv.serve(reqs), srv.stats
+
+    resps, stats = asyncio.run(drive())
+    # burst of identical queries lands in one window -> one micro-batch,
+    # engine dedup collapses the duplicates
+    assert stats.micro_batches == 1
+    assert sum(r.deduplicated for r in resps) == len(reqs) - 1
+    assert len({r.count for r in resps}) == 1
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_queue_depth_rejection_is_a_response():
+    g = erdos_renyi(40, 3.0, seed=3)
+    reqs = _light_requests(g, 6, np.random.default_rng(1), deadline_ms=100.0)
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=10.0,
+                                   max_queue_depth=2) as srv:
+            return await srv.serve(reqs), srv.stats
+
+    resps, stats = asyncio.run(drive())
+    ok = [r for r in resps if r.status == STATUS_OK]
+    shed = [r for r in resps if r.status == STATUS_REJECTED_QUEUE_FULL]
+    assert len(ok) == 2 and len(shed) == 4
+    assert stats.rejected_queue_full == 4
+    for r in shed:
+        assert r.rejected and r.count == 0 and r.paths is None
+        assert r.slo_met is False            # had a deadline, never served
+    # stats agree with the responses: shed deadline requests are SLO misses
+    assert stats.slo_missed >= 4
+
+
+def test_per_uid_quota_rejection():
+    g = erdos_renyi(40, 3.0, seed=3)
+    # one tenant floods, one stays within quota
+    flood = [PathQueryRequest(uid=7, s=0, t=i, k=3) for i in range(1, 5)]
+    fair = [PathQueryRequest(uid=8, s=0, t=5, k=3)]
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=10.0,
+                                   max_pending_per_uid=1) as srv:
+            return await srv.serve(flood + fair)
+
+    resps = asyncio.run(drive())
+    assert [r.status for r in resps[:4]].count(STATUS_REJECTED_QUOTA) == 3
+    assert resps[0].status == STATUS_OK      # first of the flood admitted
+    assert resps[4].status == STATUS_OK      # other tenant unaffected
+
+
+def test_shutdown_rejects_new_but_drains_admitted():
+    g = erdos_renyi(40, 3.0, seed=5)
+
+    async def drive():
+        srv = AsyncHcPEServer(g, batch_window_ms=30.0)
+        await srv.start()
+        admitted = asyncio.ensure_future(
+            srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=3)))
+        await asyncio.sleep(0.005)           # admitted; scheduler in window
+        stop = asyncio.ensure_future(srv.stop())
+        await asyncio.sleep(0)               # stop() has set closing
+        late = await srv.submit(PathQueryRequest(uid=1, s=0, t=2, k=3))
+        first = await admitted
+        await stop
+        return first, late
+
+    first, late = asyncio.run(drive())
+    assert first.status == STATUS_OK
+    assert late.status == STATUS_REJECTED_SHUTDOWN
+
+
+def test_malformed_queries_raise_not_reject():
+    """Malformed queries must fail their own submit (and never reach the
+    engine, where they would poison every co-batched request)."""
+    g = erdos_renyi(20, 2.0, seed=0)
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=1.0) as srv:
+            with pytest.raises(ValueError):
+                await srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=1))
+            with pytest.raises(ValueError):
+                await srv.submit(PathQueryRequest(uid=0, s=3, t=3, k=4))
+            with pytest.raises(ValueError):      # out of range for g.n == 20
+                await srv.submit(PathQueryRequest(uid=0, s=999, t=1, k=4))
+            # an innocent request sharing the window still gets served
+            ok = await srv.submit(PathQueryRequest(uid=1, s=0, t=1, k=4))
+            assert ok.status == STATUS_OK
+
+    asyncio.run(drive())
+
+
+def test_cancelled_submit_does_not_kill_scheduler():
+    """Regression: resolving a cancelled future raised InvalidStateError
+    inside the scheduler task, hanging every later request."""
+    g = erdos_renyi(40, 3.0, seed=5)
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=5.0) as srv:
+            doomed = asyncio.ensure_future(
+                srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=3)))
+            await asyncio.sleep(0.001)           # admitted, batch in window
+            doomed.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await doomed
+            # the scheduler survived: later submissions still complete
+            resp = await asyncio.wait_for(
+                srv.submit(PathQueryRequest(uid=1, s=0, t=2, k=3)), timeout=5)
+            assert resp.status == STATUS_OK
+
+    asyncio.run(drive())
+
+
+def test_submit_before_start_raises():
+    g = erdos_renyi(20, 2.0, seed=0)
+    srv = AsyncHcPEServer(g)
+
+    async def drive():
+        with pytest.raises(RuntimeError):
+            await srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=3))
+
+    asyncio.run(drive())
+
+
+# ---------------------------------------------------------------------------
+# deadline enforcement (cooperative chunk budget)
+# ---------------------------------------------------------------------------
+
+def test_enforce_deadlines_truncates_with_exhausted_false():
+    g = erdos_renyi(200, 12.0, seed=3)
+    req = PathQueryRequest(uid=0, s=0, t=1, k=8, count_only=False,
+                           deadline_ms=1.0)  # cannot finish: ~1.7M paths
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=0.0,
+                                   enforce_deadlines=True) as srv:
+            return await srv.submit(req)
+
+    resp = asyncio.run(drive())
+    assert resp.status == STATUS_OK          # served, not rejected
+    assert not resp.exhausted                # stopped at the chunk budget
+    assert resp.slo_met is False
+    full = PathEnum().count(g, 0, 1, 8)
+    assert resp.count < full
+    # whatever was emitted is a correct subset of the true result set
+    if resp.count:
+        assert resp.paths.shape[0] == resp.count
+
+
+def test_engine_deadline_noop_when_far_future():
+    g = erdos_renyi(60, 4.0, seed=9)
+    eng = BatchPathEnum()
+    queries = [(0, 1, 4), (2, 3, 4)]
+    far = eng.run(g, queries, count_only=False,
+                  deadline=time.perf_counter() + 3600.0)
+    ref = BatchPathEnum().run(g, queries, count_only=False)
+    assert far.counts.tolist() == ref.counts.tolist()
+    assert all(it.result.exhausted for it in far.items)
+
+
+def test_engine_deadline_already_passed_yields_empty_unexhausted():
+    g = erdos_renyi(60, 4.0, seed=9)
+    out = BatchPathEnum().run(g, [(0, 1, 4)], count_only=False,
+                              deadline=time.perf_counter() - 1.0)
+    item = out.items[0]
+    assert item.result.count == 0
+    assert not item.result.exhausted
+    assert item.result.paths.shape == (0, 5)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance workload: EDF beats the blocking batch on tail latency
+# ---------------------------------------------------------------------------
+
+def test_light_p99_beats_sync_serve_under_mixed_workload():
+    """1 heavy + 20 light queries, light deadlines tighter: the async
+    server's light-query p99 time-to-completion must be strictly lower
+    than HcPEServer.serve on the same workload, with identical counts
+    (deadlines unenforced -> scheduling only, results untouched)."""
+    g = erdos_renyi(200, 12.0, seed=3)
+    rng = np.random.default_rng(11)
+    heavy = PathQueryRequest(uid=0, s=0, t=1, k=8, deadline_ms=60_000.0)
+    lights = _light_requests(g, 20, rng, k=3, deadline_ms=50.0, uid0=1)
+    workload = [heavy] + lights              # heavy first: FIFO's worst case
+
+    # -- sync: one blocking batch; every request completes when serve returns
+    t0 = time.perf_counter()
+    sync_resps, _ = HcPEServer(g, BatchPathEnum()).serve(workload)
+    sync_wall = time.perf_counter() - t0
+    sync_counts = {r.uid: r.count for r in sync_resps}
+    sync_light_p99 = float(np.percentile([sync_wall] * len(lights), 99))
+
+    # -- async: same workload, cold engine, completion timed per request
+    async def drive():
+        async with AsyncHcPEServer(g, BatchPathEnum(),
+                                   batch_window_ms=2.0) as srv:
+            t0 = time.perf_counter()
+
+            async def timed(req):
+                resp = await srv.submit(req)
+                return resp, time.perf_counter() - t0
+
+            return await asyncio.gather(*(timed(r) for r in workload))
+
+    completions = asyncio.run(drive())
+    async_counts = {r.uid: r.count for r, _ in completions}
+    light_times = [dt for r, dt in completions if r.uid != heavy.uid]
+    async_light_p99 = float(np.percentile(light_times, 99))
+
+    assert async_counts == sync_counts       # byte-identical result counts
+    assert async_light_p99 < sync_light_p99, (async_light_p99, sync_light_p99)
+    # the tight-SLO lights actually jumped the heavy query
+    heavy_time = next(dt for r, dt in completions if r.uid == heavy.uid)
+    assert max(light_times) < heavy_time
+
+
+# ---------------------------------------------------------------------------
+# _merge_outputs timing semantics (regression for the async scheduler)
+# ---------------------------------------------------------------------------
+
+def _span_output(start, end):
+    return BatchOutput(items=[], cache_stats=CacheStats(), distinct_queries=0,
+                       timing=BatchTiming(total_seconds=end - start,
+                                          started_at=start, ended_at=end))
+
+
+def test_merge_outputs_overlapping_groups_use_union_span():
+    """Regression: per-group walls were summed, overstating batch latency
+    once groups run concurrently under the async scheduler."""
+    a = _span_output(10.0, 12.0)             # 2 s
+    b = _span_output(11.0, 13.5)             # 2.5 s, overlaps a
+    merged = _merge_outputs([a, b])
+    assert merged.timing.total_seconds == pytest.approx(3.5)  # not 4.5
+    assert merged.timing.started_at == 10.0
+    assert merged.timing.ended_at == 13.5
+
+
+def test_merge_outputs_idle_gaps_not_billed_as_serving_time():
+    """Two 1 s micro-batches separated by 9 s of idle server: busy time
+    is 2 s (interval union), not the 11 s end-to-start span — otherwise
+    drain_report deflates throughput on any non-back-to-back workload."""
+    a = _span_output(10.0, 11.0)
+    b = _span_output(20.0, 21.0)
+    merged = _merge_outputs([a, b])
+    assert merged.timing.total_seconds == pytest.approx(2.0)
+    assert (merged.timing.started_at, merged.timing.ended_at) == (10.0, 21.0)
+
+
+def test_merge_outputs_without_spans_falls_back_to_sum():
+    a = BatchOutput(items=[], cache_stats=CacheStats(), distinct_queries=0,
+                    timing=BatchTiming(total_seconds=1.0))
+    b = BatchOutput(items=[], cache_stats=CacheStats(), distinct_queries=0,
+                    timing=BatchTiming(total_seconds=2.0))
+    merged = _merge_outputs([a, b])
+    assert merged.timing.total_seconds == pytest.approx(3.0)
+
+
+def test_real_engine_outputs_carry_spans():
+    g = erdos_renyi(40, 3.0, seed=6)
+    out = BatchPathEnum().run(g, [(0, 1, 3)])
+    assert out.timing.ended_at > out.timing.started_at > 0.0
+    assert out.timing.total_seconds == pytest.approx(
+        out.timing.ended_at - out.timing.started_at)

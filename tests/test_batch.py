@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import (BatchPathEnum, IndexCache, PathEnum, build_index,
                         erdos_renyi, power_law)
-from repro.core.batch import batched_index_distances
+from repro.core.batch import CacheStats, batched_index_distances
 from repro.core.graph import random_graph_suite
 from repro.serving.hcpe import HcPEServer, PathQueryRequest
 
@@ -148,6 +148,59 @@ def test_lru_eviction_order_is_least_recently_used():
     assert cache.get((0, 1, 2, 0)) == "a"
     assert cache.get((0, 2, 2, 0)) is None
     assert cache.stats.evictions == 1
+
+
+def test_capacity_one_lru_thrash():
+    """Alternating keys through a capacity-1 cache: every get misses,
+    every put past the first evicts, and len never exceeds 1."""
+    cache = IndexCache(capacity=1)
+    keys = [(0, 1, 2, 0), (0, 2, 2, 0)]
+    for round_ in range(4):
+        key = keys[round_ % 2]
+        assert cache.get(key) is None                  # always thrashed out
+        cache.put(key, f"idx{round_}")
+        assert len(cache) == 1
+    assert cache.stats.misses == 4
+    assert cache.stats.hits == 0
+    assert cache.stats.evictions == 3                  # first put fills, rest evict
+    # the survivor is the last inserted
+    assert cache.get(keys[1]) == "idx3"
+
+
+def test_cache_clear_resets_entries_and_stats():
+    cache = IndexCache(capacity=4)
+    cache.put((0, 1, 2, 0), "a")
+    cache.get((0, 1, 2, 0))
+    cache.get((9, 9, 9, 9))
+    assert cache.stats.lookups == 2
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.get((0, 1, 2, 0)) is None             # entry really gone
+    # stats describe only the post-clear epoch: the one miss above
+    assert (cache.stats.hits, cache.stats.misses,
+            cache.stats.evictions) == (0, 1, 0)
+
+
+def test_cache_stats_snapshot_delta_arithmetic():
+    stats = CacheStats(hits=5, misses=3, evictions=2)
+    snap = stats.snapshot()
+    assert snap is not stats                           # value copy, not alias
+    stats.hits += 10
+    stats.misses += 4
+    stats.evictions += 1
+    assert (snap.hits, snap.misses, snap.evictions) == (5, 3, 2)
+    d = stats.delta(snap)
+    assert (d.hits, d.misses, d.evictions) == (10, 4, 1)
+    assert d.lookups == 14
+    assert d.hit_rate == pytest.approx(10 / 14)
+    # delta against self is all-zero
+    z = stats.delta(stats.snapshot())
+    assert (z.hits, z.misses, z.evictions) == (0, 0, 0)
+
+
+def test_cache_hit_rate_zero_lookups_is_zero_not_nan():
+    assert CacheStats().hit_rate == 0.0
+    assert CacheStats(evictions=3).hit_rate == 0.0     # evictions aren't lookups
 
 
 def test_zero_capacity_cache_never_stores():

@@ -1,0 +1,230 @@
+"""Oracle fuzz suite: every engine path vs core.oracle on random digraphs.
+
+HcPE is *set* enumeration: the one contract every engine path must honor
+is exact path-set equality with the backtracking oracle (Alg. 1).  This
+suite fuzzes that contract over random digraphs of varying size/density —
+through the per-query dfs/join/auto plans, ``BatchPathEnum.run``, and the
+async server — plus the named edge cases (k at the engine's floor, s
+adjacent to t, t unreachable, in-batch duplicates).
+
+Two layers:
+  * a deterministic seeded sweep — a fast smoke slice that always runs,
+    and a ``slow``-marked 200-case sweep (the CI fast leg skips it; the
+    scheduled full-fuzz leg and local tier-1 run it);
+  * a hypothesis layer (shrinking finds minimal counterexamples) that
+    activates when hypothesis is installed and is likewise ``slow``.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEnum, PathEnum, build_index,
+                        enumerate_paths_idx, enumerate_paths_join,
+                        from_edges, oracle)
+from repro.core.graph import PAD
+from repro.serving import AsyncHcPEServer, PathQueryRequest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+FAST_CASES = 24
+SWEEP_CASES = 200
+
+
+# ---------------------------------------------------------------------------
+# case generation: deterministic per seed
+# ---------------------------------------------------------------------------
+
+def _random_case(seed):
+    """(graph, s, t, k) spanning sparse→dense digraphs, n in [4, 26]."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 27))
+    density = float(rng.choice([0.5, 1.0, 2.0, 3.5]))   # mean out-degree
+    m = max(1, int(n * density))
+    edges = rng.integers(0, n, size=(m, 2))             # dups/self-loops ok
+    g = from_edges(n, edges)
+    s, t = map(int, rng.choice(n, 2, replace=False))
+    k = int(rng.integers(2, 7))
+    return g, s, t, k
+
+
+def _check_engines_match_oracle(seed):
+    g, s, t, k = _random_case(seed)
+    want = oracle.paths_as_set(oracle.enumerate_paths(g, s, t, k))
+    label = f"seed={seed} n={g.n} m={g.m} q=({s},{t},{k})"
+
+    idx = build_index(g, s, t, k)
+    got_dfs = oracle.paths_as_set(enumerate_paths_idx(idx).as_tuples())
+    assert got_dfs == want, f"dfs != oracle [{label}]"
+
+    for cut in {1, max(1, k // 2), k - 1}:
+        got_join = oracle.paths_as_set(
+            enumerate_paths_join(idx, cut=cut).as_tuples())
+        assert got_join == want, f"join(cut={cut}) != oracle [{label}]"
+
+    eng = BatchPathEnum()
+    for mode in ("auto", "dfs", "join"):
+        out = eng.run(g, [(s, t, k)], count_only=False, mode=mode)
+        got = oracle.paths_as_set(out.items[0].result.as_tuples())
+        assert got == want, f"batch/{mode} != oracle [{label}]"
+
+
+@pytest.mark.parametrize("seed", range(FAST_CASES))
+def test_engines_match_oracle_smoke(seed):
+    _check_engines_match_oracle(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(FAST_CASES, FAST_CASES + SWEEP_CASES))
+def test_engines_match_oracle_sweep(seed):
+    _check_engines_match_oracle(seed)
+
+
+# ---------------------------------------------------------------------------
+# batch semantics: dedup of repeated (s,t,k), warm-cache stability
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batch_with_duplicates_matches_oracle(seed):
+    g, s, t, k = _random_case(1000 + seed)
+    rng = np.random.default_rng(2000 + seed)
+    pool = [(s, t, k)]
+    while len(pool) < 4:
+        a, b = map(int, rng.choice(g.n, 2, replace=False))
+        pool.append((a, b, int(rng.integers(2, 6))))
+    # repeat every query: dedup must collapse them without changing sets
+    queries = pool + pool[::-1]
+    out = BatchPathEnum().run(g, queries, count_only=False)
+    assert out.distinct_queries == len(set(pool))
+    for (a, b, kk), item in zip(queries, out.items):
+        want = oracle.paths_as_set(oracle.enumerate_paths(g, a, b, kk))
+        assert oracle.paths_as_set(item.result.as_tuples()) == want
+    first = {}
+    for q, item in zip(queries, out.items):
+        if q in first:
+            assert item.result is first[q].result     # shared, not recomputed
+            assert item.deduplicated
+        else:
+            first[q] = item
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(10))
+def test_async_server_matches_oracle(seed):
+    g, s, t, k = _random_case(3000 + seed)
+    rng = np.random.default_rng(4000 + seed)
+    reqs = [PathQueryRequest(uid=0, s=s, t=t, k=k, count_only=False)]
+    while len(reqs) < 6:
+        a, b = map(int, rng.choice(g.n, 2, replace=False))
+        reqs.append(PathQueryRequest(uid=len(reqs), s=a, t=b,
+                                     k=int(rng.integers(2, 6)),
+                                     count_only=False,
+                                     deadline_ms=float(rng.choice(
+                                         [20.0, 5000.0]))))
+    reqs.append(PathQueryRequest(uid=len(reqs), s=s, t=t, k=k,
+                                 count_only=False))   # in-batch duplicate
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=1.0) as srv:
+            return await srv.serve(reqs)
+
+    for r, q in zip(asyncio.run(drive()), reqs):
+        want = oracle.paths_as_set(oracle.enumerate_paths(g, q.s, q.t, q.k))
+        rows = r.paths if r.paths is not None else np.zeros((0, q.k + 1))
+        got = oracle.paths_as_set(
+            tuple(int(x) for x in row if x != PAD) for row in rows)
+        assert got == want, (q.s, q.t, q.k)
+        assert r.count == len(want)
+
+
+# ---------------------------------------------------------------------------
+# named edge cases
+# ---------------------------------------------------------------------------
+
+def test_k_floor_engines_reject_k1_oracle_handles_it():
+    """k=1 is below the paper's k>=2 floor: every engine path must refuse
+    it the same way, while the oracle (no floor) degrades to 'is there a
+    direct edge'."""
+    g = from_edges(4, np.array([[0, 1], [1, 2], [0, 3]]))
+    assert oracle.enumerate_paths(g, 0, 1, 1) == [(0, 1)]
+    assert oracle.enumerate_paths(g, 0, 2, 1) == []
+    with pytest.raises(ValueError):
+        PathEnum().query(g, 0, 1, 1)
+    with pytest.raises(ValueError):
+        BatchPathEnum().run(g, [(0, 1, 1)])
+
+    async def drive():
+        async with AsyncHcPEServer(g) as srv:
+            with pytest.raises(ValueError):
+                await srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=1))
+
+    asyncio.run(drive())
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_s_adjacent_to_t_direct_edge_always_included(seed):
+    g, s, t, k = _random_case(5000 + seed)
+    # rebuild with the direct edge s->t guaranteed present
+    old = np.column_stack([np.repeat(np.arange(g.n), np.diff(g.indptr)),
+                           g.indices])
+    g2 = from_edges(g.n, np.vstack([old, np.array([[s, t]])]))
+    want = oracle.paths_as_set(oracle.enumerate_paths(g2, s, t, k))
+    assert (s, t) in want                     # the 1-hop path survives
+    idx = build_index(g2, s, t, k)
+    assert oracle.paths_as_set(enumerate_paths_idx(idx).as_tuples()) == want
+    out = BatchPathEnum().run(g2, [(s, t, k)], count_only=False)
+    assert oracle.paths_as_set(out.items[0].result.as_tuples()) == want
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_t_unreachable_yields_empty_everywhere(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 20))
+    m = max(1, 2 * n)
+    # t = n-1 isolated: no edge touches it
+    edges = rng.integers(0, n - 1, size=(m, 2))
+    g = from_edges(n, edges)
+    s, t = int(rng.integers(0, n - 1)), n - 1
+    k = int(rng.integers(2, 7))
+    assert oracle.enumerate_paths(g, s, t, k) == []
+    idx = build_index(g, s, t, k)
+    assert enumerate_paths_idx(idx).count == 0
+    assert enumerate_paths_join(idx, cut=max(1, k // 2)).count == 0
+    out = BatchPathEnum().run(g, [(s, t, k)], count_only=False)
+    assert out.items[0].result.count == 0
+    assert out.items[0].result.exhausted
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer (property-based shrinkable counterexamples)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def graph_query(draw):
+        n = draw(st.integers(4, 22))
+        m = draw(st.integers(1, 3 * n))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        g = from_edges(n, np.array(edges, dtype=np.int64))
+        s = draw(st.integers(0, n - 1))
+        t = draw(st.integers(0, n - 1).filter(lambda x: x != s))
+        k = draw(st.integers(2, 6))
+        return g, s, t, k
+
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(graph_query())
+    def test_hypothesis_all_plans_match_oracle(gq):
+        g, s, t, k = gq
+        want = oracle.paths_as_set(oracle.enumerate_paths(g, s, t, k))
+        eng = BatchPathEnum()
+        for mode in ("auto", "dfs", "join"):
+            out = eng.run(g, [(s, t, k)], count_only=False, mode=mode)
+            assert oracle.paths_as_set(out.items[0].result.as_tuples()) == want
