@@ -27,6 +27,8 @@ def main() -> None:
     suites.append(("fig12_scalability", scalability.run))
     from . import response_time
     suites.append(("fig_response_time", response_time.run))
+    from . import tenancy
+    suites.append(("tenancy", tenancy.run))
     suites.append(("kernels", kernels_bench.run))
     suites.append(("roofline", roofline.run))
     if not args.skip_collectives:

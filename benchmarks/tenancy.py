@@ -1,0 +1,103 @@
+"""Multi-graph tenancy benchmark (DESIGN.md §8): isolation cost + fairness.
+
+    PYTHONPATH=src python -m benchmarks.run --only tenancy
+
+Two axes:
+
+  * **isolation overhead** — the same mixed workload served (a) as two
+    single-tenant servers, one per graph, and (b) as one registry-backed
+    ``HcPEServer`` with interleaved per-tenant requests.  The tenant
+    dimension only re-keys the cache and regroups the batch, so the
+    per-query cost of (b) must track (a); the row reports the ratio.
+  * **quota fairness** — a hot tenant with a tight ``cache_quota``
+    churning through many distinct (s, t) pairs must not evict a quiet
+    tenant's warm entries: the quiet tenant's second pass is asserted
+    100% hits, and the row reports both tenants' hit rates.
+
+Counts are asserted byte-identical between (a) and (b) — tenancy must
+never change results, only who pays for which cache entry.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import BatchPathEnum, power_law
+from repro.serving import GraphRegistry, HcPEServer, PathQueryRequest
+
+Row = Tuple[str, float, str]
+
+
+def _hot_requests(g, graph_id, count, distinct, k, seed, uid0=0):
+    rng = np.random.default_rng(seed)
+    deg = np.diff(g.indptr)
+    hubs = np.argsort(deg)[-max(2 * distinct, 8):]
+    pool = []
+    while len(pool) < distinct:
+        s, t = rng.choice(hubs, 2, replace=False)
+        if (int(s), int(t)) not in pool:
+            pool.append((int(s), int(t)))
+    picks = rng.integers(0, len(pool), size=count)
+    return [PathQueryRequest(uid=uid0 + i, s=pool[j][0], t=pool[j][1], k=k,
+                             graph_id=graph_id)
+            for i, j in enumerate(picks)]
+
+
+def run(k: int = 4, per_tenant: int = 30, distinct: int = 8) -> List[Row]:
+    """One suite run; returns ``(name, value, derived)`` CSV rows."""
+    rows: List[Row] = []
+    g_a = power_law(1500, 6.0, seed=5)
+    g_b = power_law(1500, 5.0, seed=23)
+
+    reqs_a = _hot_requests(g_a, "tenant_a", per_tenant, distinct, k, seed=1)
+    reqs_b = _hot_requests(g_b, "tenant_b", per_tenant, distinct, k, seed=2,
+                           uid0=per_tenant)
+
+    # (a) two single-tenant servers, each its own engine
+    t0 = time.perf_counter()
+    solo_a, _ = HcPEServer(g_a).serve(
+        [PathQueryRequest(uid=r.uid, s=r.s, t=r.t, k=r.k) for r in reqs_a])
+    solo_b, _ = HcPEServer(g_b).serve(
+        [PathQueryRequest(uid=r.uid, s=r.s, t=r.t, k=r.k) for r in reqs_b])
+    solo_s = time.perf_counter() - t0
+
+    # (b) one registry-backed server, requests interleaved per tenant
+    registry = GraphRegistry()
+    registry.register("tenant_a", g_a)
+    registry.register("tenant_b", g_b)
+    server = HcPEServer(registry)
+    interleaved = [r for pair in zip(reqs_a, reqs_b) for r in pair]
+    t0 = time.perf_counter()
+    multi, report = server.serve(interleaved)
+    multi_s = time.perf_counter() - t0
+
+    solo_counts = {r.uid: r.count for r in solo_a + solo_b}
+    multi_counts = {r.uid: r.count for r in multi}
+    assert multi_counts == solo_counts, "tenancy changed results"
+
+    n = len(interleaved)
+    rows.append(("tenancy/solo_ms_per_query", 1e3 * solo_s / n,
+                 f"tenants=2;per_tenant={per_tenant}"))
+    rows.append(("tenancy/multi_ms_per_query", 1e3 * multi_s / n,
+                 f"overhead={multi_s / max(solo_s, 1e-12):.2f}x;"
+                 f"hit_rate={report.cache.hit_rate:.2f}"))
+
+    # quota fairness: quiet tenant's warm entries survive a churning hot
+    # tenant bounded by a tight cache quota
+    registry2 = GraphRegistry()
+    registry2.register("quiet", g_a)
+    registry2.register("hot", g_b, cache_quota=4)
+    srv = HcPEServer(registry2, BatchPathEnum(cache_capacity=64))
+    quiet = _hot_requests(g_a, "quiet", 20, 10, k, seed=3)
+    srv.serve(quiet)                              # warm the quiet tenant
+    churn = _hot_requests(g_b, "hot", 60, 40, k, seed=4, uid0=100)
+    _, churn_rep = srv.serve(churn)               # hot tenant churns
+    _, warm_rep = srv.serve(quiet)                # quiet tenant returns
+    quiet_stats = warm_rep.tenant_cache["quiet"]
+    assert quiet_stats.misses == 0, "hot tenant evicted quiet tenant"
+    rows.append(("tenancy/quiet_warm_hit_rate", quiet_stats.hit_rate,
+                 f"hot_evictions={churn_rep.tenant_cache['hot'].evictions};"
+                 f"hot_cache_len={srv.engine.cache.tenant_len('hot')}"))
+    return rows

@@ -13,8 +13,15 @@ served twice:
     thread.  The tight-SLO lights are grouped, scheduled, and answered
     before the heavy query runs; result counts are identical.
 
-Siblings: examples/batch_serving.py (the sync HcPE batch front-end) and
-examples/serve_batch.py (LM decode serving, unrelated to HcPE).
+``AsyncHcPEServer(g, ...)`` uses the single-graph convenience form (the
+graph wraps into a one-tenant ``GraphRegistry``, DESIGN.md §8); the
+per-uid quota shown here is the client-level sibling of the per-tenant
+``max_pending`` quota the registry flow adds.
+
+Siblings: examples/batch_serving.py (the sync HcPE batch front-end),
+examples/multi_tenant_serving.py (many tenant graphs behind one server,
+per-tenant quotas) and examples/serve_batch.py (LM decode serving,
+unrelated to HcPE).
 """
 import asyncio
 import time

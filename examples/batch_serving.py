@@ -7,12 +7,20 @@ hitting a small set of hot s-t pairs), serves it twice through HcPEServer
 and prints the serving report — throughput, latency percentiles, and the
 index-cache reuse that makes the second batch cheap.
 
-Not to be confused with its two similarly-named siblings:
+``HcPEServer(g)`` here is the single-graph convenience form: the bare
+graph wraps into a one-tenant ``GraphRegistry`` under the default
+``graph_id`` (DESIGN.md §8), so this demo is byte-identical to the
+pre-tenancy server.
+
+Not to be confused with its similarly-named siblings:
   * examples/serve_batch.py — **LM decode** serving (continuous batching
     over decode slots, serving/engine.py); no path queries involved.
   * examples/async_serving.py — the **async** HcPE front-end
     (AsyncHcPEServer: admission control + deadline-aware micro-batching)
     layered over the same engine this demo drives synchronously.
+  * examples/multi_tenant_serving.py — the **multi-graph** registry flow
+    (GraphRegistry: many tenant graphs, per-tenant quotas/stats) over
+    both front-ends.
 """
 import numpy as np
 

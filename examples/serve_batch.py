@@ -8,6 +8,8 @@ query serving see the similarly-named siblings:
   * examples/batch_serving.py — sync HcPE batch front-end (HcPEServer).
   * examples/async_serving.py — async deadline-aware HcPE front-end
     (AsyncHcPEServer).
+  * examples/multi_tenant_serving.py — many tenant graphs behind one
+    HcPE server (GraphRegistry, DESIGN.md §8).
 """
 import subprocess, sys, os
 subprocess.run([sys.executable, "-m", "repro.launch.serve",

@@ -9,8 +9,8 @@ from .enumerate import EnumResult, EnumStats, EngineLimit, enumerate_paths_idx
 from .join import enumerate_paths_join
 from .pathenum import PathEnum, QueryOutput, QueryTiming
 from .batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
-                    CacheStats, IndexCache, batched_index_distances,
-                    edge_mask_hash)
+                    CacheStats, DEFAULT_GRAPH_ID, IndexCache,
+                    batched_index_distances, edge_mask_hash, tenant_of)
 from .baseline import generic_dfs
 from . import oracle, constraints, relations
 
@@ -23,4 +23,5 @@ __all__ = [
     "QueryTiming", "generic_dfs", "oracle", "constraints", "relations",
     "BatchPathEnum", "BatchOutput", "BatchItem", "BatchTiming", "CacheStats",
     "IndexCache", "batched_index_distances", "edge_mask_hash",
+    "DEFAULT_GRAPH_ID", "tenant_of",
 ]

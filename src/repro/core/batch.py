@@ -9,10 +9,12 @@ those sharing levers to the PathEnum pipeline:
   1. **result dedup** — identical ``(s, t, k)`` queries in a batch run the
      pipeline once; duplicates receive the same ``EnumResult`` object.
   2. **index cache** — ``LightweightIndex`` builds are cached in an LRU
-     keyed on ``(s, t, k, edge_mask_hash)`` that persists across batches,
-     so recurring queries (the hot s-t pairs of a production workload) skip
-     the build entirely.  Cache stats (hits / misses / evictions) are
-     first-class so callers can assert on reuse.
+     keyed on ``(graph_id, s, t, k, edge_mask_hash)`` that persists across
+     batches, so recurring queries (the hot s-t pairs of a production
+     workload) skip the build entirely.  Cache stats (hits / misses /
+     evictions) are first-class — globally and per tenant — so callers can
+     assert on reuse; per-tenant capacity quotas bound a noisy tenant's
+     cache footprint (DESIGN.md §8).
   3. **stacked BFS** — the two bounded-BFS distance passes of every
      cache-missing query are stacked into one (Q, n) frontier matrix and
      relaxed together: one ``minimum.reduceat`` over the CSR per hop
@@ -42,7 +44,27 @@ from .join import enumerate_paths_join
 from .pathenum import PathEnum
 from .planner import DEFAULT_TAU, Plan
 
-QueryKey = Tuple[int, int, int, int]  # (s, t, k, edge_mask_hash)
+# The engine's cache key.  ``graph_id`` is the tenant dimension
+# (DESIGN.md §8): one engine — and therefore one LRU — serves many tenant
+# graphs, and the id keeps their entries (and stats, and eviction
+# pressure) apart.  Single-graph callers never see it: every entry point
+# defaults to ``DEFAULT_GRAPH_ID``.
+QueryKey = Tuple[str, int, int, int, int]  # (graph_id, s, t, k, edge_mask_hash)
+
+DEFAULT_GRAPH_ID = "default"
+
+
+def tenant_of(key) -> str:
+    """The tenant a cache key belongs to.
+
+    5-tuple ``QueryKey``s carry their ``graph_id`` first; legacy 4-tuple
+    ``(s, t, k, edge_mask_hash)`` keys (pre-tenancy callers poking the
+    cache directly) fold onto ``DEFAULT_GRAPH_ID`` (DESIGN.md §8's
+    single-graph compatibility contract).
+    """
+    if isinstance(key, tuple) and key and isinstance(key[0], str):
+        return key[0]
+    return DEFAULT_GRAPH_ID
 
 
 def edge_mask_hash(edge_mask: Optional[np.ndarray]) -> int:
@@ -56,70 +78,166 @@ def edge_mask_hash(edge_mask: Optional[np.ndarray]) -> int:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Monotone hit/miss/eviction counters for one cache scope — the whole
+    ``IndexCache`` or one tenant's slice of it (DESIGN.md §4, §8)."""
     hits: int = 0
     misses: int = 0
     evictions: int = 0
 
     @property
     def lookups(self) -> int:
+        """Total lookups: hits + misses (evictions are not lookups)."""
         return self.hits + self.misses
 
     @property
     def hit_rate(self) -> float:
+        """Hits over lookups; 0.0 (not NaN) when nothing was looked up."""
         return self.hits / self.lookups if self.lookups else 0.0
 
     def snapshot(self) -> "CacheStats":
+        """A value copy, for later ``delta`` arithmetic."""
         return CacheStats(self.hits, self.misses, self.evictions)
 
     def delta(self, since: "CacheStats") -> "CacheStats":
+        """Counters accumulated since ``since`` (an earlier snapshot)."""
         return CacheStats(self.hits - since.hits, self.misses - since.misses,
                           self.evictions - since.evictions)
 
 
 class IndexCache:
-    """LRU over ``LightweightIndex`` keyed on ``(s, t, k, edge_mask_hash)``.
+    """Tenant-aware LRU over ``LightweightIndex`` keyed on ``QueryKey``
+    (``(graph_id, s, t, k, edge_mask_hash)``; legacy 4-tuple keys fold onto
+    ``DEFAULT_GRAPH_ID`` via ``tenant_of``).  DESIGN.md §4 and §8.
 
     A hit moves the entry to the MRU slot; inserting past ``capacity``
-    evicts the LRU entry.  Indexes are immutable once built, so sharing one
-    object across queries (and across batches) is safe.
+    evicts the global LRU entry.  On top of the global bound, each tenant
+    may carry a *quota* (``set_quota``): inserting past it evicts that
+    tenant's own LRU entry first, so a noisy tenant churns its own slice
+    of the cache and never squeezes out its neighbors' entries.  Stats are
+    kept both globally (``stats``) and per tenant (``stats_for``).
+    Indexes are immutable once built, so sharing one object across
+    queries, batches and tenants is safe.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256,
+                 tenant_quotas: Optional[Dict[str, int]] = None):
         if capacity < 0:
             raise ValueError("capacity must be >= 0")
         self.capacity = capacity
         self.stats = CacheStats()
         self._entries: "collections.OrderedDict[QueryKey, LightweightIndex]" \
             = collections.OrderedDict()
+        self._quotas: Dict[str, int] = {}
+        self._tenant_stats: Dict[str, CacheStats] = {}
+        # per-tenant LRU-ordered key index (mirrors _entries' recency per
+        # tenant) so quota eviction pops a tenant's LRU in O(1) instead
+        # of scanning the global OrderedDict
+        self._tenant_keys: "Dict[str, collections.OrderedDict]" = {}
+        for gid, quota in (tenant_quotas or {}).items():
+            self.set_quota(gid, quota)
 
     def __len__(self) -> int:
         return len(self._entries)
 
+    def tenant_len(self, graph_id: str) -> int:
+        """Entries currently held for one tenant."""
+        return len(self._tenant_keys.get(graph_id, ()))
+
+    def stats_for(self, graph_id: str) -> CacheStats:
+        """This tenant's live hit/miss/eviction counters (zero if never
+        seen); the same mutable object is returned across calls, so
+        ``snapshot``/``delta`` arithmetic works per tenant too."""
+        return self._tenant_stats.setdefault(graph_id, CacheStats())
+
+    def quota_for(self, graph_id: str) -> Optional[int]:
+        """The tenant's entry quota, or None when only the global
+        ``capacity`` bounds it."""
+        return self._quotas.get(graph_id)
+
+    def set_quota(self, graph_id: str, quota: Optional[int]) -> None:
+        """Bound (or unbound, with None) one tenant's entry count; if the
+        tenant already exceeds the new quota its LRU entries are evicted
+        immediately."""
+        if quota is None:
+            self._quotas.pop(graph_id, None)
+            return
+        if quota < 0:
+            raise ValueError("tenant quota must be >= 0")
+        self._quotas[graph_id] = quota
+        while self.tenant_len(graph_id) > quota:
+            self._evict_tenant_lru(graph_id)
+
     def get(self, key: QueryKey) -> Optional[LightweightIndex]:
+        """Look one key up; a hit refreshes its LRU position.  Updates the
+        global and the key's tenant counters."""
+        tenant = tenant_of(key)
+        tstats = self.stats_for(tenant)
         idx = self._entries.get(key)
         if idx is None:
             self.stats.misses += 1
+            tstats.misses += 1
             return None
         self._entries.move_to_end(key)
+        self._tenant_keys[tenant].move_to_end(key)
         self.stats.hits += 1
+        tstats.hits += 1
         return idx
 
     def put(self, key: QueryKey, idx: LightweightIndex) -> None:
-        if self.capacity == 0:
+        """Insert (or refresh) one entry, evicting first the owning
+        tenant's LRU past its quota, then the global LRU past
+        ``capacity``.  A zero quota (or zero capacity) stores nothing."""
+        tenant = tenant_of(key)
+        quota = self._quotas.get(tenant)
+        if self.capacity == 0 or quota == 0:
             return
         if key in self._entries:
             self._entries.move_to_end(key)
+            self._tenant_keys[tenant].move_to_end(key)
             self._entries[key] = idx
             return
+        if quota is not None:
+            while self.tenant_len(tenant) >= quota:
+                self._evict_tenant_lru(tenant)
         while len(self._entries) >= self.capacity:
-            self._entries.popitem(last=False)
-            self.stats.evictions += 1
+            self._evict(next(iter(self._entries)))
         self._entries[key] = idx
+        self._tenant_keys.setdefault(
+            tenant, collections.OrderedDict())[key] = None
+
+    def _evict(self, key: QueryKey) -> None:
+        tenant = tenant_of(key)
+        del self._entries[key]
+        tkeys = self._tenant_keys[tenant]
+        del tkeys[key]
+        if not tkeys:
+            del self._tenant_keys[tenant]
+        self.stats.evictions += 1
+        self.stats_for(tenant).evictions += 1
+
+    def _evict_tenant_lru(self, graph_id: str) -> None:
+        self._evict(next(iter(self._tenant_keys[graph_id])))
+
+    def drop_tenant(self, graph_id: str) -> int:
+        """Administratively drop every entry (and the quota) of one tenant
+        — the cache half of ``GraphRegistry.retire``.  Returns the number
+        of entries dropped; unlike quota/capacity pressure this is not
+        counted as evictions (it is a retirement, not churn), but the
+        tenant's historical stats survive for post-mortems."""
+        doomed = self._tenant_keys.pop(graph_id, None) or ()
+        for k in doomed:
+            del self._entries[k]
+        self._quotas.pop(graph_id, None)
+        return len(doomed)
 
     def clear(self) -> None:
-        """Drop all entries and reset stats — a fresh-cache baseline, so
-        post-clear hit/miss/eviction counters describe only the new epoch."""
+        """Drop all entries and reset stats (global and per-tenant) — a
+        fresh-cache baseline, so post-clear hit/miss/eviction counters
+        describe only the new epoch.  Tenant quotas survive: they are
+        configuration, not state."""
         self._entries.clear()
+        self._tenant_keys.clear()
+        self._tenant_stats.clear()
         self.stats = CacheStats()
 
 
@@ -223,6 +341,9 @@ class BatchItem:
 
 @dataclasses.dataclass
 class BatchTiming:
+    """Per-phase attributable seconds for one batch (DESIGN.md §4);
+    component times are CPU work and merge as sums, the wall-clock span
+    merges as interval union (serving/hcpe._merge_outputs)."""
     distance_seconds: float = 0.0
     index_seconds: float = 0.0
     optimize_seconds: float = 0.0
@@ -237,20 +358,27 @@ class BatchTiming:
 
 @dataclasses.dataclass
 class BatchOutput:
+    """One ``BatchPathEnum.run``'s results: per-query items (input order),
+    phase timing, the cache-stats delta observed during the run, and the
+    tenant (``graph_id``) the batch ran against (DESIGN.md §4, §8)."""
     items: List[BatchItem]
     timing: BatchTiming
     cache_stats: CacheStats          # delta for this batch
     distinct_queries: int
+    graph_id: str = DEFAULT_GRAPH_ID  # the tenant this batch served
 
     @property
     def counts(self) -> np.ndarray:
+        """Per-query result counts, input order."""
         return np.array([it.result.count for it in self.items], np.int64)
 
     @property
     def total_results(self) -> int:
+        """Sum of all per-query counts."""
         return int(self.counts.sum())
 
     def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        """Attributable per-query latency percentiles in milliseconds."""
         lats = np.array([it.latency_seconds for it in self.items])
         if lats.size == 0:
             return {f"p{q}_ms": 0.0 for q in qs}
@@ -258,6 +386,7 @@ class BatchOutput:
 
     @property
     def throughput_qps(self) -> float:
+        """Queries served per wall-clock second of this batch."""
         return len(self.items) / max(self.timing.total_seconds, 1e-12)
 
 
@@ -266,19 +395,25 @@ class BatchOutput:
 # ---------------------------------------------------------------------------
 
 class BatchPathEnum:
-    """Batched front-end over the Figure-2 pipeline.
+    """Batched front-end over the Figure-2 pipeline (DESIGN.md §4, §8).
 
-    Accepts ``(s, t, k)`` triples against one graph; shares work across the
-    batch (dedup, index LRU, stacked BFS) and across calls (the LRU
-    persists on the engine).  ``engine`` parameters mirror PathEnum.
+    Accepts ``(s, t, k)`` triples against one graph per call; shares work
+    across the batch (dedup, index LRU, stacked BFS) and across calls (the
+    LRU persists on the engine).  The engine itself is graph-agnostic:
+    each ``run`` names its tenant via ``graph_id`` and the cache keeps the
+    tenants' entries apart, so one engine (one LRU, one set of knobs)
+    serves a whole ``GraphRegistry``.  ``engine`` parameters mirror
+    PathEnum.
     """
 
     def __init__(self, tau: float = DEFAULT_TAU, chunk_size: int = 16384,
                  max_partials: Optional[int] = 20_000_000,
-                 cache_capacity: int = 256, bfs_block: int = 128):
+                 cache_capacity: int = 256, bfs_block: int = 128,
+                 tenant_quotas: Optional[Dict[str, int]] = None):
         self.engine = PathEnum(tau=tau, chunk_size=chunk_size,
                                max_partials=max_partials)
-        self.cache = IndexCache(capacity=cache_capacity)
+        self.cache = IndexCache(capacity=cache_capacity,
+                                tenant_quotas=tenant_quotas)
         self.bfs_block = bfs_block
 
     # -- index acquisition --------------------------------------------------
@@ -315,17 +450,17 @@ class BatchPathEnum:
         if precomputed:
             dists.update({k: precomputed[k] for k in missing
                           if k in precomputed})
-        unmasked = [k for k in missing if k[3] == 0 and k not in dists]
+        unmasked = [k for k in missing if k[4] == 0 and k not in dists]
         if unmasked:
             t0 = time.perf_counter()
             stacked = batched_index_distances(
-                graph, [(s, t, k) for (s, t, k, _) in unmasked],
+                graph, [(s, t, k) for (_, s, t, k, _) in unmasked],
                 block=self.bfs_block)
             timing.distance_seconds += time.perf_counter() - t0
             dists.update(dict(zip(unmasked, stacked)))
 
         for key in missing:
-            s, t, k, _ = key
+            _, s, t, k, _mh = key
             t0 = time.perf_counter()
             if key in dists:
                 d_s, d_t = dists[key]
@@ -356,10 +491,19 @@ class BatchPathEnum:
             count_only: bool = True, first_n: Optional[int] = None,
             mode: str = "auto", edge_mask: Optional[np.ndarray] = None,
             deadline: Optional[float] = None,
+            graph_id: str = DEFAULT_GRAPH_ID,
             _precomputed_distances: Optional[Dict[QueryKey, Tuple[np.ndarray,
                                                                   np.ndarray]]] = None,
             ) -> BatchOutput:
         """Serve a batch; returns per-query items in input order.
+
+        ``graph_id`` names the tenant ``graph`` belongs to (DESIGN.md §8):
+        it prefixes every cache key this run touches, so two tenants'
+        identical ``(s, t, k)`` queries never share an index entry.  All
+        queries of one ``run`` are against one graph — multi-tenant
+        callers group by ``graph_id`` first (serving/hcpe.group_requests)
+        and run one batch per group.  The default id keeps single-graph
+        callers on the exact pre-tenancy behavior.
 
         ``deadline`` (absolute ``time.perf_counter()``) is the batch's
         cooperative stop: enumeration halts at the next chunk boundary
@@ -382,7 +526,8 @@ class BatchPathEnum:
             if s == t:
                 raise ValueError("s and t must be distinct")
         mh = edge_mask_hash(edge_mask)
-        keys = [(int(s), int(t), int(k), mh) for (s, t, k) in queries]
+        keys = [(graph_id, int(s), int(t), int(k), mh)
+                for (s, t, k) in queries]
 
         resolved = self._indexes_for(graph, keys, edge_mask,
                                      _precomputed_distances, timing)
@@ -405,7 +550,7 @@ class BatchPathEnum:
                             used_full_estimator=False)
             elif mode == "join":
                 dp_plan = planner_mod.plan_query(idx, tau=-1.0)
-                cut = dp_plan.cut if dp_plan.cut else max(1, key[2] // 2)
+                cut = dp_plan.cut if dp_plan.cut else max(1, key[3] // 2)
                 plan = Plan(method="join", cut=cut, preliminary=-1.0,
                             used_full_estimator=True)
             else:
@@ -414,7 +559,7 @@ class BatchPathEnum:
             t1 = time.perf_counter()
             res = self._enumerate(idx, plan, count_only, first_n, deadline)
             timing.enumerate_seconds += time.perf_counter() - t1
-            item = BatchItem(s=key[0], t=key[1], k=key[2], result=res,
+            item = BatchItem(s=key[1], t=key[2], k=key[3], result=res,
                              plan=plan, index_cached=was_cached,
                              deduplicated=False,
                              latency_seconds=time.perf_counter() - t0)
@@ -426,8 +571,10 @@ class BatchPathEnum:
         timing.total_seconds = timing.ended_at - t_batch
         return BatchOutput(items=list(items), timing=timing,  # type: ignore[arg-type]
                            cache_stats=self.cache.stats.delta(stats_before),
-                           distinct_queries=len(memo))
+                           distinct_queries=len(memo), graph_id=graph_id)
 
     def counts(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
                **kw) -> np.ndarray:
+        """Convenience: ``run(..., count_only=True)`` reduced to the
+        per-query count vector."""
         return self.run(graph, queries, count_only=True, **kw).counts

@@ -20,7 +20,7 @@ across queries; each query's frontier expansion runs on its data-shard
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map as _shard_map
-from ..core.batch import BatchOutput, BatchPathEnum
+from ..core.batch import BatchOutput, BatchPathEnum, DEFAULT_GRAPH_ID
 from ..core.graph import Graph
 
 
@@ -174,7 +174,8 @@ class DistributedPathEnum:
 
     def enumerate_batch(self, queries: np.ndarray, count_only: bool = True,
                         first_n: Optional[int] = None,
-                        engine: Optional[BatchPathEnum] = None) -> BatchOutput:
+                        engine: Optional[BatchPathEnum] = None,
+                        graph_id: str = DEFAULT_GRAPH_ID) -> BatchOutput:
         """Batch entry point: mesh distances, host enumeration.
 
         ``queries`` is (Q, 2) of (s, t); the hop bound is the engine's k.
@@ -185,18 +186,72 @@ class DistributedPathEnum:
         precomputed distances, so the host pipeline skips its own BFS and
         goes straight to index assembly, planning and enumeration — with
         the engine's dedup and index LRU still applying across the batch.
+
+        ``graph_id`` names the tenant this instance's graph belongs to
+        (DESIGN.md §8): it keys the precomputed-distance hand-off and the
+        engine's LRU, so a shared host engine keeps tenants' entries
+        apart.  Multi-tenant routing across instances lives in
+        ``DistributedTenantRouter``.
         """
         engine = engine or BatchPathEnum()
         q = np.asarray(queries, np.int64).reshape(-1, 2)
         triples = [(int(s), int(t), self.k) for (s, t) in q]
         if q.shape[0] == 0:
-            return engine.run(self.graph, [])
+            return engine.run(self.graph, [], graph_id=graph_id)
         dsize = self.mesh.shape["data"]
         pad = (-q.shape[0]) % dsize
         padded = np.concatenate([q, np.repeat(q[:1], pad, axis=0)]) \
             if pad else q
         _, _, _, (ds, dt) = self.query_batch_stats(padded)
-        pre = {(s, t, k, 0): (ds[i].astype(np.int32), dt[i].astype(np.int32))
+        pre = {(graph_id, s, t, k, 0): (ds[i].astype(np.int32),
+                                        dt[i].astype(np.int32))
                for i, (s, t, k) in enumerate(triples)}
         return engine.run(self.graph, triples, count_only=count_only,
-                          first_n=first_n, _precomputed_distances=pre)
+                          first_n=first_n, graph_id=graph_id,
+                          _precomputed_distances=pre)
+
+
+class DistributedTenantRouter:
+    """Per-graph routing over a set of ``DistributedPathEnum`` instances
+    (DESIGN.md §8's distributed leg).
+
+    One mesh hosts several tenant graphs, each sharded over ``model`` by
+    its own ``DistributedPathEnum``; one *shared* host ``BatchPathEnum``
+    (one LRU, tenant-keyed) serves them all.  ``enumerate`` takes queries
+    tagged ``(graph_id, s, t)``, groups them per graph, routes each group
+    through its tenant's mesh BFS across the ``data`` axis, and
+    reassembles the per-query items in input order.
+    """
+
+    def __init__(self, tenants: Dict[str, DistributedPathEnum],
+                 engine: Optional[BatchPathEnum] = None):
+        self.tenants = dict(tenants)
+        self.engine = engine or BatchPathEnum()
+
+    def enumerate(self, tagged_queries: Sequence[Tuple[str, int, int]],
+                  count_only: bool = True,
+                  first_n: Optional[int] = None,
+                  ) -> Tuple[List[object], Dict[str, BatchOutput]]:
+        """Serve ``(graph_id, s, t)`` queries; unknown ids raise KeyError.
+
+        Returns ``(items, outputs)``: per-query ``BatchItem``s in input
+        order plus the per-tenant ``BatchOutput`` each group produced
+        (timing / cache-delta observability per tenant).
+        """
+        groups: Dict[str, List[int]] = {}
+        for pos, (gid, _s, _t) in enumerate(tagged_queries):
+            if gid not in self.tenants:
+                raise KeyError(f"unknown graph_id {gid!r}")
+            groups.setdefault(gid, []).append(pos)
+        items: List[object] = [None] * len(tagged_queries)
+        outputs: Dict[str, BatchOutput] = {}
+        for gid, positions in groups.items():
+            q = np.array([[tagged_queries[p][1], tagged_queries[p][2]]
+                          for p in positions], np.int64)
+            out = self.tenants[gid].enumerate_batch(
+                q, count_only=count_only, first_n=first_n,
+                engine=self.engine, graph_id=gid)
+            outputs[gid] = out
+            for p, item in zip(positions, out.items):
+                items[p] = item
+        return items, outputs

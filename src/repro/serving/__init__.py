@@ -1,14 +1,21 @@
 """Serving layer: continuous-batching LM decode (engine.py), the HcPE
-batch query front-end (hcpe.py, DESIGN.md §4), and the async
-deadline-aware HcPE front-end (async_server.py, DESIGN.md §7)."""
+batch query front-end (hcpe.py, DESIGN.md §4), the async deadline-aware
+HcPE front-end (async_server.py, DESIGN.md §7), and the tenant-graph
+registry behind both HcPE front-ends (registry.py, DESIGN.md §8).  The
+public surface is documented in the README "API reference" section."""
 
 from . import engine  # noqa: F401
 from .async_server import AsyncHcPEServer, AsyncServeStats
 from .hcpe import (BatchServeReport, HcPEServer, PathQueryRequest,
                    PathQueryResponse, STATUS_OK, STATUS_REJECTED_QUEUE_FULL,
-                   STATUS_REJECTED_QUOTA, STATUS_REJECTED_SHUTDOWN)
+                   STATUS_REJECTED_QUOTA, STATUS_REJECTED_SHUTDOWN,
+                   STATUS_REJECTED_TENANT_QUOTA,
+                   STATUS_REJECTED_UNKNOWN_GRAPH)
+from .registry import GraphRegistry, TenantEntry
 
 __all__ = ["engine", "HcPEServer", "PathQueryRequest", "PathQueryResponse",
            "BatchServeReport", "AsyncHcPEServer", "AsyncServeStats",
+           "GraphRegistry", "TenantEntry",
            "STATUS_OK", "STATUS_REJECTED_QUEUE_FULL", "STATUS_REJECTED_QUOTA",
+           "STATUS_REJECTED_TENANT_QUOTA", "STATUS_REJECTED_UNKNOWN_GRAPH",
            "STATUS_REJECTED_SHUTDOWN"]

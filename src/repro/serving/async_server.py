@@ -46,22 +46,29 @@ import math
 import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
-from ..core.batch import BatchOutput, BatchPathEnum
+from typing import Union
+
+from ..core.batch import BatchOutput, BatchPathEnum, DEFAULT_GRAPH_ID
 from ..core.graph import Graph
 from .hcpe import (BatchServeReport, PathQueryRequest, PathQueryResponse,
                    STATUS_REJECTED_QUEUE_FULL, STATUS_REJECTED_QUOTA,
-                   STATUS_REJECTED_SHUTDOWN, _merge_outputs,
-                   rejection_response, request_group_key, response_from_item)
+                   STATUS_REJECTED_SHUTDOWN, STATUS_REJECTED_TENANT_QUOTA,
+                   STATUS_REJECTED_UNKNOWN_GRAPH, rejection_response,
+                   request_group_key, response_from_item)
+from .registry import GraphRegistry
 
 
 @dataclasses.dataclass
 class AsyncServeStats:
-    """Counters over the server's lifetime (admission + SLO outcomes)."""
+    """Counters over the server's lifetime (admission + SLO outcomes;
+    DESIGN.md §7, tenancy §8)."""
     submitted: int = 0
     accepted: int = 0
     completed: int = 0
     rejected_queue_full: int = 0
     rejected_quota: int = 0
+    rejected_tenant_quota: int = 0
+    rejected_unknown_graph: int = 0
     rejected_shutdown: int = 0
     micro_batches: int = 0
     slo_met: int = 0
@@ -83,16 +90,22 @@ class _Pending:
 
 
 class AsyncHcPEServer:
-    """Asyncio front-end over one graph + one ``BatchPathEnum`` engine.
+    """Asyncio front-end over a tenant-graph registry + one
+    ``BatchPathEnum`` engine (DESIGN.md §7, tenancy §8).
 
     Usage::
 
-        async with AsyncHcPEServer(graph) as server:
+        async with AsyncHcPEServer(graph_or_registry) as server:
             resp = await server.submit(PathQueryRequest(uid=0, s=3, t=9, k=4,
                                                         deadline_ms=50.0))
 
-    The engine — and therefore the index LRU — is shared across all
-    micro-batches, exactly as it is across ``HcPEServer.serve`` calls.
+    A bare ``Graph`` wraps into a single-tenant registry under
+    ``DEFAULT_GRAPH_ID``, so pre-tenancy call sites run unchanged.  The
+    engine — and therefore the tenant-keyed index LRU — is shared across
+    all micro-batches and tenants, exactly as it is across
+    ``HcPEServer.serve`` calls.  Micro-batches group by
+    ``(graph_id, count_only, first_n)``: one engine batch never mixes
+    tenants.
 
     Parameters
     ----------
@@ -104,7 +117,12 @@ class AsyncHcPEServer:
         Admission bound on requests queued or in flight; past it,
         ``submit`` resolves immediately to STATUS_REJECTED_QUEUE_FULL.
     max_pending_per_uid:
-        Per-uid (tenant) in-flight quota → STATUS_REJECTED_QUOTA.
+        Per-uid (client) in-flight quota → STATUS_REJECTED_QUOTA.
+    max_pending_per_graph:
+        Per-tenant-graph in-flight quota → STATUS_REJECTED_TENANT_QUOTA.
+        ``None`` (default) leaves tenants unbounded unless their registry
+        entry carries its own ``max_pending``, which always wins over
+        this server-wide default.
     deadline_slack_ms:
         Two requests share a micro-batch only if their absolute deadlines
         are within this slack (and their serving options match) — keeps a
@@ -119,18 +137,22 @@ class AsyncHcPEServer:
         deadlines order the work and grade SLOs, but never change results.
     """
 
-    def __init__(self, graph: Graph, engine: Optional[BatchPathEnum] = None,
+    def __init__(self, graph: Union[Graph, GraphRegistry],
+                 engine: Optional[BatchPathEnum] = None,
                  *, batch_window_ms: float = 2.0, max_queue_depth: int = 1024,
                  max_pending_per_uid: int = 256,
+                 max_pending_per_graph: Optional[int] = None,
                  deadline_slack_ms: float = 25.0,
                  default_deadline_ms: Optional[float] = None,
                  enforce_deadlines: bool = False,
                  report_capacity: int = 256):
-        self.graph = graph
+        self.registry = GraphRegistry.wrap(graph)
         self.engine = engine or BatchPathEnum()
+        self.registry.bind_engine(self.engine)
         self.batch_window_ms = batch_window_ms
         self.max_queue_depth = max_queue_depth
         self.max_pending_per_uid = max_pending_per_uid
+        self.max_pending_per_graph = max_pending_per_graph
         self.deadline_slack_ms = deadline_slack_ms
         self.default_deadline_ms = default_deadline_ms
         self.enforce_deadlines = enforce_deadlines
@@ -138,6 +160,7 @@ class AsyncHcPEServer:
         self._pending: List[_Pending] = []
         self._inflight = 0                 # admitted, response not yet sent
         self._per_uid: Dict[int, int] = {}
+        self._per_graph: Dict[str, int] = {}
         self._seq = itertools.count()
         # drain_report's source, capped: count_only=False outputs hold the
         # full path arrays, so an undrained server must not retain every
@@ -151,6 +174,7 @@ class AsyncHcPEServer:
     # -- lifecycle ----------------------------------------------------------
 
     async def start(self) -> None:
+        """Start the scheduler task; ``async with`` calls this for you."""
         if self._task is not None:
             raise RuntimeError("server already started")
         self._closing = False
@@ -179,13 +203,31 @@ class AsyncHcPEServer:
 
     @property
     def queue_depth(self) -> int:
+        """Requests admitted whose responses have not been sent yet."""
         return self._inflight
+
+    @property
+    def graph(self) -> Optional[Graph]:
+        """The default tenant's graph (back-compat accessor for
+        single-graph callers); None when no default tenant exists."""
+        if DEFAULT_GRAPH_ID in self.registry:
+            return self.registry.get(DEFAULT_GRAPH_ID)
+        return None
+
+    def _tenant_quota(self, graph_id: str) -> Optional[int]:
+        """The in-flight quota for one tenant: its registry entry's
+        ``max_pending`` if set, else the server-wide default."""
+        entry = self.registry.entry(graph_id)
+        return (entry.max_pending if entry.max_pending is not None
+                else self.max_pending_per_graph)
 
     async def submit(self, req: PathQueryRequest) -> PathQueryResponse:
         """Admit one request and await its response.
 
-        Admission failures *return* a rejection response; malformed
-        queries (k < 2, s == t) raise ValueError like the engine would.
+        Admission failures — queue depth, per-uid quota, per-tenant
+        quota, unknown ``graph_id``, shutdown — *return* a rejection
+        response; malformed queries (k < 2, s == t, s/t out of range for
+        the tenant's graph) raise ValueError like the engine would.
         """
         if self._task is None:
             raise RuntimeError("server not started (use `async with` or "
@@ -196,8 +238,20 @@ class AsyncHcPEServer:
             raise ValueError("paper assumes k >= 2")
         if req.s == req.t:
             raise ValueError("s and t must be distinct")
-        if not (0 <= req.s < self.graph.n and 0 <= req.t < self.graph.n):
-            raise ValueError(f"s/t out of range for graph with n={self.graph.n}")
+        if req.graph_id not in self.registry:
+            # admission, not validation: tenants register/retire at
+            # runtime, so an unknown graph is load-shed state the client
+            # must see in-band (a retired tenant is not a client bug)
+            self.stats.submitted += 1
+            self.stats.rejected_unknown_graph += 1
+            return self._rejected(req, STATUS_REJECTED_UNKNOWN_GRAPH)
+        graph = self.registry.get(req.graph_id)
+        # range check before the submitted counter: a ValueError is a
+        # client bug, not traffic — submitted must stay equal to
+        # accepted + sum(rejected_*)
+        if not (0 <= req.s < graph.n and 0 <= req.t < graph.n):
+            raise ValueError(f"s/t out of range for graph "
+                             f"{req.graph_id!r} with n={graph.n}")
         self.stats.submitted += 1
         if self._closing:
             self.stats.rejected_shutdown += 1
@@ -208,6 +262,11 @@ class AsyncHcPEServer:
         if self._per_uid.get(req.uid, 0) >= self.max_pending_per_uid:
             self.stats.rejected_quota += 1
             return self._rejected(req, STATUS_REJECTED_QUOTA)
+        tenant_quota = self._tenant_quota(req.graph_id)
+        if tenant_quota is not None and \
+                self._per_graph.get(req.graph_id, 0) >= tenant_quota:
+            self.stats.rejected_tenant_quota += 1
+            return self._rejected(req, STATUS_REJECTED_TENANT_QUOTA)
 
         now = time.perf_counter()
         dl_ms = (req.deadline_ms if req.deadline_ms is not None
@@ -220,6 +279,8 @@ class AsyncHcPEServer:
         self.stats.accepted += 1
         self._inflight += 1
         self._per_uid[req.uid] = self._per_uid.get(req.uid, 0) + 1
+        self._per_graph[req.graph_id] = \
+            self._per_graph.get(req.graph_id, 0) + 1
         self._pending.append(pending)
         self._wakeup.set()
         return await pending.future
@@ -244,10 +305,11 @@ class AsyncHcPEServer:
         """Merge (and clear) the engine outputs accumulated since the last
         call — at most the ``report_capacity`` most recent micro-batches —
         into one ``BatchServeReport``; concurrent spans merge as
-        max-of-overlapping wall time (hcpe._merge_outputs)."""
+        max-of-overlapping wall time (hcpe._merge_outputs) and the cache
+        delta stays split per tenant (``tenant_cache``)."""
         outputs = list(self._outputs)
         self._outputs.clear()
-        return BatchServeReport.from_output(_merge_outputs(outputs))
+        return BatchServeReport.from_outputs(outputs)
 
     # -- scheduling ---------------------------------------------------------
 
@@ -288,8 +350,22 @@ class AsyncHcPEServer:
                 await self._serve_group(self._pop_edf_group())
 
     async def _serve_group(self, group: List[_Pending]) -> None:
+        """Run one micro-batch (all members share a ``request_group_key``,
+        so one tenant graph) in a worker thread and settle its futures.
+        A tenant retired between admission and dispatch fails soft: its
+        group resolves to ``STATUS_REJECTED_UNKNOWN_GRAPH`` responses."""
         self.stats.micro_batches += 1
-        count_only, first_n = group[0].req.count_only, group[0].req.first_n
+        head = group[0].req
+        count_only, first_n = head.count_only, head.first_n
+        if head.graph_id not in self.registry:
+            for p in group:
+                if not p.future.done():
+                    self.stats.rejected_unknown_graph += 1
+                    p.future.set_result(self._rejected(
+                        p.req, STATUS_REJECTED_UNKNOWN_GRAPH))
+                self._settle(p)
+            return
+        graph = self.registry.get(head.graph_id)
         deadline = None
         if self.enforce_deadlines:
             deadlines = [p.deadline_at for p in group]
@@ -300,8 +376,9 @@ class AsyncHcPEServer:
         dispatched = time.perf_counter()
         try:
             out = await asyncio.to_thread(
-                self.engine.run, self.graph, queries, count_only=count_only,
-                first_n=first_n, deadline=deadline)
+                self.engine.run, graph, queries, count_only=count_only,
+                first_n=first_n, deadline=deadline,
+                graph_id=head.graph_id)
         except BaseException as exc:  # engine bug: fail the group, not the loop
             for p in group:
                 if not p.future.done():
@@ -335,3 +412,8 @@ class AsyncHcPEServer:
             self._per_uid[p.req.uid] = left
         else:
             self._per_uid.pop(p.req.uid, None)
+        gleft = self._per_graph.get(p.req.graph_id, 0) - 1
+        if gleft > 0:
+            self._per_graph[p.req.graph_id] = gleft
+        else:
+            self._per_graph.pop(p.req.graph_id, None)

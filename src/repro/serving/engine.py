@@ -1,4 +1,5 @@
-"""Batched serving engine: fixed-slot continuous batching over decode_step.
+"""Batched serving engine: fixed-slot continuous batching over decode_step
+(DESIGN.md §5).
 
 A minimal-but-real scheduler: B decode slots, a FIFO request queue, slot
 re-fill on completion (continuous batching), per-request max_tokens and
@@ -26,6 +27,8 @@ from ..training import step as step_mod
 
 @dataclasses.dataclass
 class Request:
+    """One LM decode request: prompt tokens in, generated tokens out
+    (the decode-slot analogue of hcpe.PathQueryRequest; DESIGN.md §5)."""
     uid: int
     prompt: np.ndarray            # (L,) int32
     max_tokens: int = 16
@@ -35,6 +38,11 @@ class Request:
 
 
 class ServeEngine:
+    """Fixed-slot continuous-batching decode engine (DESIGN.md §5): B
+    decode slots over one jitted decode step, FIFO admission, slot
+    re-fill on completion.  Not tenant-aware — multi-graph tenancy is an
+    HcPE-serving concern (DESIGN.md §8); this engine serves one model."""
+
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0):
         self.cfg = cfg
@@ -52,6 +60,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue one request; it is admitted to a slot on the next
+        ``run`` iteration with a free slot (FIFO)."""
         self.queue.append(req)
 
     def _reset_slot(self, slot: int) -> None:

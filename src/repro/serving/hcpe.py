@@ -1,25 +1,29 @@
-"""HcPE batch serving front-end (DESIGN.md §4).
+"""HcPE batch serving front-end (DESIGN.md §4, tenancy §8).
 
-Request/response dataclasses around core.batch.BatchPathEnum: a server owns
-one graph + one engine (whose index LRU persists across batches — the hot
-s-t pairs of a production workload keep their indexes warm), turns a list
-of ``PathQueryRequest`` into ``PathQueryResponse`` objects, and reports
-batch-level serving metrics: latency percentiles, throughput, and cache
-reuse.  This is the paper's "online scenario" (§7.1: 1000-query sets,
-response time = first results out) expressed as a service API; the LM
-serving analogue with continuous batching lives in serving/engine.py.
+Request/response dataclasses around core.batch.BatchPathEnum: a server
+owns a ``GraphRegistry`` of tenant graphs (or one bare graph, wrapped)
+plus one engine (whose tenant-keyed index LRU persists across batches —
+the hot s-t pairs of a production workload keep their indexes warm),
+turns a list of ``PathQueryRequest`` into ``PathQueryResponse`` objects,
+and reports batch-level serving metrics: latency percentiles, throughput,
+and cache reuse (global and per tenant).  This is the paper's "online
+scenario" (§7.1: 1000-query sets, response time = first results out)
+expressed as a service API; the README "API reference" section documents
+the public surface; the LM serving analogue with continuous batching
+lives in serving/engine.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
-                          CacheStats)
+                          CacheStats, DEFAULT_GRAPH_ID)
 from ..core.graph import Graph
+from .registry import GraphRegistry
 
 
 # Response statuses.  Rejections are *responses*, not exceptions: an
@@ -28,12 +32,19 @@ from ..core.graph import Graph
 STATUS_OK = "ok"
 STATUS_REJECTED_QUEUE_FULL = "rejected_queue_full"
 STATUS_REJECTED_QUOTA = "rejected_quota"
+STATUS_REJECTED_TENANT_QUOTA = "rejected_tenant_quota"
+STATUS_REJECTED_UNKNOWN_GRAPH = "rejected_unknown_graph"
 STATUS_REJECTED_SHUTDOWN = "rejected_shutdown"
 
 
 @dataclasses.dataclass
 class PathQueryRequest:
-    """One HcPE query q(s, t, k) plus serving options.
+    """One HcPE query q(s, t, k) plus serving options (DESIGN.md §4, §8).
+
+    ``graph_id`` names the tenant graph the query runs against; the
+    default id is the single-graph compatibility contract — servers built
+    from a bare ``Graph`` serve it under ``DEFAULT_GRAPH_ID`` and every
+    pre-tenancy call site works unchanged.
 
     ``deadline_ms`` is the per-request SLO (relative to submission).  The
     sync server ignores it; the async front-end (async_server.py) uses it
@@ -48,10 +59,15 @@ class PathQueryRequest:
     count_only: bool = True
     first_n: Optional[int] = None     # response-time mode: first-n results
     deadline_ms: Optional[float] = None
+    graph_id: str = DEFAULT_GRAPH_ID  # tenant graph (DESIGN.md §8)
 
 
 @dataclasses.dataclass
 class PathQueryResponse:
+    """The wire response for one ``PathQueryRequest`` (DESIGN.md §4, §8):
+    result payload, plan/cache observability, the end-to-end latency
+    split, and the admission status (``STATUS_*``; ``rejected`` requests
+    carry zero results, never an exception)."""
     uid: int
     count: int
     paths: Optional[np.ndarray]       # (r, k+1) int32 when materialized
@@ -66,15 +82,21 @@ class PathQueryResponse:
     service_ms: float = 0.0           # dispatch -> response ready
     total_ms: float = 0.0             # submission -> response ready
     slo_met: Optional[bool] = None    # None: request carried no deadline
+    graph_id: str = DEFAULT_GRAPH_ID  # tenant that served (or rejected) it
 
     @property
     def rejected(self) -> bool:
+        """True when the request was shed at admission (any non-OK
+        status): no engine work happened for it."""
         return self.status != STATUS_OK
 
 
 @dataclasses.dataclass
 class BatchServeReport:
-    """Per-batch serving metrics (the paper's Table-3 axes, batch form)."""
+    """Per-batch serving metrics (the paper's Table-3 axes, batch form;
+    DESIGN.md §4).  ``cache`` is the batch-level delta; ``tenant_cache``
+    splits it by ``graph_id`` so per-tenant reuse (and eviction churn) is
+    observable per serve call (DESIGN.md §8)."""
     batch_size: int
     distinct_queries: int
     total_results: int
@@ -85,9 +107,12 @@ class BatchServeReport:
     p90_ms: float
     p99_ms: float
     cache: CacheStats                 # hits/misses/evictions for this batch
+    tenant_cache: Dict[str, CacheStats] = dataclasses.field(
+        default_factory=dict)         # the same delta, split per graph_id
 
     @classmethod
     def from_output(cls, out: BatchOutput) -> "BatchServeReport":
+        """Fold one (possibly merged) engine output into a report."""
         pct = out.latency_percentiles((50, 90, 99))
         wall = out.timing.total_seconds
         return cls(batch_size=len(out.items),
@@ -99,22 +124,36 @@ class BatchServeReport:
                    p50_ms=pct["p50_ms"], p90_ms=pct["p90_ms"],
                    p99_ms=pct["p99_ms"], cache=out.cache_stats)
 
+    @classmethod
+    def from_outputs(cls, outputs: List[BatchOutput]) -> "BatchServeReport":
+        """Merge per-group outputs (``_merge_outputs`` semantics) and keep
+        the per-tenant cache-delta split that the merge would flatten."""
+        report = cls.from_output(_merge_outputs(outputs))
+        tenant: Dict[str, CacheStats] = {}
+        for o in outputs:
+            agg = tenant.setdefault(o.graph_id, CacheStats())
+            agg.hits += o.cache_stats.hits
+            agg.misses += o.cache_stats.misses
+            agg.evictions += o.cache_stats.evictions
+        report.tenant_cache = tenant
+        return report
+
 
 # ---------------------------------------------------------------------------
 # Grouping / response assembly — one code path shared by the sync server
 # below and the async front-end (async_server.py)
 # ---------------------------------------------------------------------------
 
-GroupKey = Tuple[bool, Optional[int]]  # (count_only, first_n)
+GroupKey = Tuple[str, bool, Optional[int]]  # (graph_id, count_only, first_n)
 
 
 def request_group_key(req: PathQueryRequest) -> GroupKey:
     """The engine-batch compatibility key: requests sharing it can be
-    served by one ``BatchPathEnum.run`` call (the engine takes
-    count_only / first_n per batch, not per query).  Both front-ends
-    derive their grouping from this one function — extend it here, never
-    inline."""
-    return (req.count_only, req.first_n)
+    served by one ``BatchPathEnum.run`` call (the engine takes the graph,
+    count_only and first_n per batch, not per query — so the tenant
+    dimension groups first, DESIGN.md §8).  Both front-ends derive their
+    grouping from this one function — extend it here, never inline."""
+    return (req.graph_id, req.count_only, req.first_n)
 
 
 def group_requests(requests: Sequence[PathQueryRequest],
@@ -137,7 +176,8 @@ def response_from_item(req: PathQueryRequest,
         index_cached=item.index_cached,
         deduplicated=item.deduplicated,
         latency_ms=item.latency_seconds * 1e3,
-        exhausted=item.result.exhausted)
+        exhausted=item.result.exhausted,
+        graph_id=req.graph_id)
 
 
 def rejection_response(req: PathQueryRequest, status: str,
@@ -148,42 +188,71 @@ def rejection_response(req: PathQueryRequest, status: str,
         uid=req.uid, count=0, paths=None, plan_method="none",
         index_cached=False, deduplicated=False, latency_ms=0.0,
         exhausted=False, status=status, queue_ms=queue_ms,
-        service_ms=0.0, total_ms=queue_ms, slo_met=slo_met)
+        service_ms=0.0, total_ms=queue_ms, slo_met=slo_met,
+        graph_id=req.graph_id)
 
 
 class HcPEServer:
-    """Batch HcPE serving over one graph.
+    """Batch HcPE serving over a registry of tenant graphs (DESIGN.md §4,
+    §8) — or one bare graph, which wraps into a single-tenant registry
+    under ``DEFAULT_GRAPH_ID`` (the pre-tenancy call sites run unchanged).
 
-    Groups requests by their (count_only, first_n) serving options — each
-    group is one BatchPathEnum.run — and reassembles responses in request
-    order.  The engine (and therefore the index LRU) is shared across
-    groups and across serve() calls.  The call blocks until the whole
+    Groups requests by their (graph_id, count_only, first_n) serving
+    options — each group is one BatchPathEnum.run against its tenant's
+    graph — and reassembles responses in request order.  Requests naming
+    an unregistered ``graph_id`` come back as
+    ``STATUS_REJECTED_UNKNOWN_GRAPH`` responses, never exceptions.  The
+    engine (and therefore the tenant-keyed index LRU) is shared across
+    groups, tenants and serve() calls.  The call blocks until the whole
     batch finishes; for an online workload with per-request SLOs use
     ``AsyncHcPEServer`` (async_server.py), which shares these helpers.
     """
 
-    def __init__(self, graph: Graph, engine: Optional[BatchPathEnum] = None):
-        self.graph = graph
+    def __init__(self, graph: Union[Graph, GraphRegistry],
+                 engine: Optional[BatchPathEnum] = None):
+        self.registry = GraphRegistry.wrap(graph)
         self.engine = engine or BatchPathEnum()
+        self.registry.bind_engine(self.engine)
+
+    @property
+    def graph(self) -> Optional[Graph]:
+        """The default tenant's graph (back-compat accessor for
+        single-graph callers); None when no default tenant exists."""
+        if DEFAULT_GRAPH_ID in self.registry:
+            return self.registry.get(DEFAULT_GRAPH_ID)
+        return None
 
     def serve(self, requests: Sequence[PathQueryRequest],
               ) -> Tuple[List[PathQueryResponse], BatchServeReport]:
+        """Serve one request batch; responses come back in request order,
+        alongside the batch-level ``BatchServeReport`` (latency
+        percentiles, throughput, cache deltas global + per tenant)."""
         responses: List[Optional[PathQueryResponse]] = [None] * len(requests)
         outputs: List[BatchOutput] = []
-        for (count_only, first_n), positions in group_requests(requests).items():
+        for key, positions in group_requests(requests).items():
+            graph_id, count_only, first_n = key
+            if graph_id not in self.registry:
+                for p in positions:
+                    responses[p] = rejection_response(
+                        requests[p], STATUS_REJECTED_UNKNOWN_GRAPH)
+                continue
             queries = [(requests[p].s, requests[p].t, requests[p].k)
                        for p in positions]
-            out = self.engine.run(self.graph, queries, count_only=count_only,
-                                  first_n=first_n)
+            out = self.engine.run(self.registry.get(graph_id), queries,
+                                  count_only=count_only, first_n=first_n,
+                                  graph_id=graph_id)
             outputs.append(out)
             for p, item in zip(positions, out.items):
                 resp = response_from_item(requests[p], item)
                 resp.service_ms = resp.total_ms = resp.latency_ms
                 responses[p] = resp
-        report = BatchServeReport.from_output(_merge_outputs(outputs))
+        report = BatchServeReport.from_outputs(outputs)
         # the per-group sum double-counts a (s,t,k) served under several
-        # serving options; the request list is the truth
-        report.distinct_queries = len({(r.s, r.t, r.k) for r in requests})
+        # serving options; the request list is the truth (rejected
+        # requests did no engine work and don't count)
+        report.distinct_queries = len(
+            {(r.graph_id, r.s, r.t, r.k) for r in requests
+             if r.graph_id in self.registry})
         return list(responses), report  # type: ignore[arg-type]
 
 

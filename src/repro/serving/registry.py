@@ -1,0 +1,142 @@
+"""GraphRegistry — the tenant dimension of the serving stack (DESIGN.md §8).
+
+One deployment serves many tenant graphs (fraud rings per customer,
+per-region social graphs) behind one front-end; the batch-HcPE follow-up
+work (arXiv:2312.01424) argues the sharing wins compound when queries
+against them run through one engine.  The registry is the authority on
+which ``graph_id``s exist:
+
+  * **register / retire** — tenants come and go at runtime; retiring a
+    tenant also drops its entries (and quota) from every engine cache
+    bound to the registry, so a retired graph cannot keep serving stale
+    indexes.
+  * **per-tenant knobs** — each entry may carry an index-cache entry
+    quota (``cache_quota``, enforced by ``core.batch.IndexCache``) and an
+    in-flight request quota (``max_pending``, enforced at admission by
+    ``AsyncHcPEServer``).
+  * **single-graph compatibility** — ``GraphRegistry.wrap(graph)`` puts a
+    bare graph under ``DEFAULT_GRAPH_ID``; both servers accept either a
+    ``Graph`` or a registry, so every pre-tenancy call site runs
+    unchanged.
+
+The registry is deliberately host-local and synchronous: it names graphs
+and owns their quotas, nothing else.  Scheduling lives in the servers,
+caching in the engine; the sharded (cross-host) cache on the ROADMAP will
+consistent-hash on the same ``(graph_id, s, t, k, edge_mask_hash)`` keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Dict, Optional, Tuple, Union
+
+from ..core.batch import BatchPathEnum, DEFAULT_GRAPH_ID
+from ..core.graph import Graph
+
+
+@dataclasses.dataclass
+class TenantEntry:
+    """One registered tenant: its graph plus per-tenant serving knobs
+    (DESIGN.md §8).  ``cache_quota`` bounds the tenant's index-cache
+    entries; ``max_pending`` bounds its admitted-but-unanswered requests
+    in the async front-end (None = the server's default applies)."""
+    graph_id: str
+    graph: Graph
+    cache_quota: Optional[int] = None
+    max_pending: Optional[int] = None
+
+
+class GraphRegistry:
+    """Mutable ``graph_id -> TenantEntry`` map shared by the serving
+    front-ends (DESIGN.md §8).
+
+    Engines *bind* to the registry (``bind_engine``): binding pushes each
+    tenant's ``cache_quota`` into the engine's ``IndexCache``, and
+    ``retire`` drops the tenant's cache entries from every bound engine.
+    Both servers bind their engine automatically.
+    """
+
+    def __init__(self, default_graph: Optional[Graph] = None):
+        self._entries: Dict[str, TenantEntry] = {}
+        # weak: a registry outliving its servers (per-batch HcPEServer
+        # over a long-lived registry) must not pin their engines/caches
+        self._engines: "weakref.WeakSet[BatchPathEnum]" = weakref.WeakSet()
+        if default_graph is not None:
+            self.register(DEFAULT_GRAPH_ID, default_graph)
+
+    @classmethod
+    def wrap(cls, graph_or_registry: Union[Graph, "GraphRegistry"],
+             ) -> "GraphRegistry":
+        """The single-graph compatibility shim: a bare ``Graph`` becomes a
+        one-tenant registry under ``DEFAULT_GRAPH_ID``; a registry passes
+        through untouched."""
+        if isinstance(graph_or_registry, GraphRegistry):
+            return graph_or_registry
+        return cls(default_graph=graph_or_registry)
+
+    # -- tenant lifecycle ---------------------------------------------------
+
+    def register(self, graph_id: str, graph: Graph, *,
+                 cache_quota: Optional[int] = None,
+                 max_pending: Optional[int] = None) -> TenantEntry:
+        """Add (or replace) one tenant; quotas propagate to every bound
+        engine's cache immediately.  Replacing a tenant's graph drops its
+        old cache entries first — indexes built against the old graph must
+        not answer queries against the new one."""
+        if not graph_id:
+            raise ValueError("graph_id must be a non-empty string")
+        if graph_id in self._entries:
+            self._drop_from_engines(graph_id)
+        entry = TenantEntry(graph_id=graph_id, graph=graph,
+                            cache_quota=cache_quota, max_pending=max_pending)
+        self._entries[graph_id] = entry
+        for engine in self._engines:
+            engine.cache.set_quota(graph_id, cache_quota)
+        return entry
+
+    def retire(self, graph_id: str) -> TenantEntry:
+        """Remove one tenant and purge its entries from every bound
+        engine cache.  In-flight requests already grouped against the
+        graph finish; requests admitted after retirement are rejected
+        with ``STATUS_REJECTED_UNKNOWN_GRAPH``."""
+        entry = self._entries.pop(graph_id)
+        self._drop_from_engines(graph_id)
+        return entry
+
+    def _drop_from_engines(self, graph_id: str) -> None:
+        for engine in self._engines:
+            engine.cache.drop_tenant(graph_id)
+
+    # -- lookup -------------------------------------------------------------
+
+    def get(self, graph_id: str) -> Graph:
+        """The tenant's graph; raises KeyError for unknown ids (the
+        servers translate that into a rejection response)."""
+        return self._entries[graph_id].graph
+
+    def entry(self, graph_id: str) -> TenantEntry:
+        """The tenant's full entry (graph + quotas); KeyError if unknown."""
+        return self._entries[graph_id]
+
+    def graph_ids(self) -> Tuple[str, ...]:
+        """All registered ids, registration order."""
+        return tuple(self._entries)
+
+    def __contains__(self, graph_id: str) -> bool:
+        return graph_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- engine binding -----------------------------------------------------
+
+    def bind_engine(self, engine: BatchPathEnum) -> None:
+        """Attach one engine: current tenants' cache quotas are applied to
+        its ``IndexCache`` now, and future register/retire calls keep it
+        in sync.  Idempotent per engine object; the reference is weak, so
+        a short-lived server's engine unbinds itself by being collected."""
+        if engine in self._engines:
+            return
+        self._engines.add(engine)
+        for entry in self._entries.values():
+            engine.cache.set_quota(entry.graph_id, entry.cache_quota)

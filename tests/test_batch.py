@@ -203,6 +203,114 @@ def test_cache_hit_rate_zero_lookups_is_zero_not_nan():
     assert CacheStats(evictions=3).hit_rate == 0.0     # evictions aren't lookups
 
 
+def test_tenant_quota_evicts_own_lru_not_neighbors():
+    """A tenant over its quota churns its own LRU slice; other tenants'
+    entries (and the global LRU order) are untouched."""
+    cache = IndexCache(capacity=16, tenant_quotas={"hot": 2})
+    cache.put(("quiet", 0, 1, 2, 0), "q0")
+    for i in range(5):
+        cache.put(("hot", 0, i, 2, 0), f"h{i}")
+    assert cache.tenant_len("hot") == 2            # quota enforced
+    assert cache.tenant_len("quiet") == 1          # neighbor untouched
+    assert cache.get(("quiet", 0, 1, 2, 0)) == "q0"
+    # survivors are the hot tenant's two most recent inserts
+    assert cache.get(("hot", 0, 4, 2, 0)) == "h4"
+    assert cache.get(("hot", 0, 3, 2, 0)) == "h3"
+    assert cache.get(("hot", 0, 0, 2, 0)) is None
+    assert cache.stats_for("hot").evictions == 3
+    assert cache.stats_for("quiet").evictions == 0
+
+
+def test_tenant_stats_partition_global_stats():
+    cache = IndexCache(capacity=8)
+    cache.put(("a", 0, 1, 2, 0), "ia")
+    cache.put(("b", 0, 1, 2, 0), "ib")
+    cache.get(("a", 0, 1, 2, 0))                   # a: hit
+    cache.get(("b", 9, 9, 9, 0))                   # b: miss
+    a, b = cache.stats_for("a"), cache.stats_for("b")
+    assert (a.hits, a.misses) == (1, 0)
+    assert (b.hits, b.misses) == (0, 1)
+    assert cache.stats.hits == a.hits + b.hits
+    assert cache.stats.misses == a.misses + b.misses
+
+
+def test_tenant_zero_quota_stores_nothing():
+    cache = IndexCache(capacity=8, tenant_quotas={"banned": 0})
+    cache.put(("banned", 0, 1, 2, 0), "idx")
+    assert len(cache) == 0
+    cache.put(("other", 0, 1, 2, 0), "idx")        # unquota'd tenant fine
+    assert cache.tenant_len("other") == 1
+
+
+def test_set_quota_shrinks_existing_tenant_entries():
+    cache = IndexCache(capacity=8)
+    for i in range(4):
+        cache.put(("t", 0, i, 2, 0), f"i{i}")
+    cache.set_quota("t", 1)
+    assert cache.tenant_len("t") == 1
+    assert cache.get(("t", 0, 3, 2, 0)) == "i3"    # MRU survives
+    assert cache.stats_for("t").evictions == 3
+    cache.set_quota("t", None)                     # unbound again
+    assert cache.quota_for("t") is None
+
+
+def test_drop_tenant_purges_entries_without_eviction_churn():
+    cache = IndexCache(capacity=8)
+    cache.put(("a", 0, 1, 2, 0), "ia")
+    cache.put(("a", 0, 2, 2, 0), "ia2")
+    cache.put(("b", 0, 1, 2, 0), "ib")
+    assert cache.drop_tenant("a") == 2
+    assert cache.tenant_len("a") == 0 and len(cache) == 1
+    assert cache.stats.evictions == 0              # retirement, not churn
+    assert cache.get(("b", 0, 1, 2, 0)) == "ib"
+
+
+def test_legacy_4tuple_keys_fold_onto_default_tenant():
+    """Pre-tenancy callers poking the cache with (s, t, k, mh) keys land
+    on DEFAULT_GRAPH_ID — the single-graph compatibility contract."""
+    from repro.core import DEFAULT_GRAPH_ID, tenant_of
+
+    assert tenant_of((0, 1, 2, 0)) == DEFAULT_GRAPH_ID
+    assert tenant_of(("g2", 0, 1, 2, 0)) == "g2"
+    cache = IndexCache(capacity=4)
+    cache.put((0, 1, 2, 0), "legacy")
+    assert cache.tenant_len(DEFAULT_GRAPH_ID) == 1
+    assert cache.get((0, 1, 2, 0)) == "legacy"
+    assert cache.stats_for(DEFAULT_GRAPH_ID).hits == 1
+
+
+def test_global_capacity_still_bounds_quota_free_tenants():
+    """Tenants without quotas compete in the global LRU exactly as before
+    (and cross-tenant eviction under global pressure is expected)."""
+    cache = IndexCache(capacity=2)
+    cache.put(("a", 0, 1, 2, 0), "ia")
+    cache.put(("b", 0, 1, 2, 0), "ib")
+    cache.put(("c", 0, 1, 2, 0), "ic")             # evicts a's entry (LRU)
+    assert len(cache) == 2
+    assert cache.get(("a", 0, 1, 2, 0)) is None
+    assert cache.stats_for("a").evictions == 1
+
+
+def test_engine_runs_keyed_by_graph_id_isolate_tenants():
+    """Same (s, t, k) on two different graphs through ONE engine: each
+    run must build (and later hit) its own tenant's index and return the
+    graph-correct counts."""
+    g_a = erdos_renyi(50, 4.0, seed=1)
+    g_b = power_law(50, 5.0, seed=2)
+    eng = BatchPathEnum()
+    q = [(2, 7, 4)]
+    out_a = eng.run(g_a, q, graph_id="a")
+    out_b = eng.run(g_b, q, graph_id="b")
+    assert out_a.graph_id == "a" and out_b.graph_id == "b"
+    assert out_b.cache_stats.misses == 1           # no cross-tenant reuse
+    seq = PathEnum()
+    assert out_a.counts[0] == seq.count(g_a, 2, 7, 4)
+    assert out_b.counts[0] == seq.count(g_b, 2, 7, 4)
+    warm_a = eng.run(g_a, q, graph_id="a")
+    assert warm_a.cache_stats.hits == 1 and warm_a.cache_stats.misses == 0
+    assert eng.cache.tenant_len("a") == 1 and eng.cache.tenant_len("b") == 1
+
+
 def test_zero_capacity_cache_never_stores():
     g = erdos_renyi(40, 3.0, seed=1)
     eng = BatchPathEnum(cache_capacity=0)

@@ -74,6 +74,53 @@ def test_distributed_pathenum_matches_host():
     assert json.loads(out.strip().splitlines()[-1])["ok"]
 
 
+def test_distributed_tenant_router_matches_host_per_graph():
+    """DESIGN.md §8, distributed leg: tagged (graph_id, s, t) queries
+    route per-graph across the data axis through one shared host engine,
+    counts byte-identical to per-graph host runs, cache tenant-keyed."""
+    out = run_sub("""
+        from repro.core import BatchPathEnum, PathEnum, erdos_renyi, power_law
+        from repro.distributed.engine import (DistributedPathEnum,
+                                              DistributedTenantRouter)
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        k = 4
+        g_a = erdos_renyi(50, 4.0, seed=5)
+        g_b = power_law(60, 5.0, seed=9)
+        engine = BatchPathEnum()
+        router = DistributedTenantRouter(
+            {"a": DistributedPathEnum(mesh, g_a, k),
+             "b": DistributedPathEnum(mesh, g_b, k)}, engine=engine)
+        rng = np.random.default_rng(1)
+        tagged = []
+        while len(tagged) < 10:
+            s, t = rng.integers(0, 50, 2)
+            if s != t:
+                tagged.append((("a", "b")[len(tagged) % 2], int(s), int(t)))
+        items, outputs = router.enumerate(tagged)
+        seq = PathEnum()
+        graphs = {"a": g_a, "b": g_b}
+        ok = all(it.result.count == seq.count(graphs[gid], s, t, k)
+                 for (gid, s, t), it in zip(tagged, items))
+        unknown_raises = False
+        try:
+            router.enumerate([("ghost", 0, 1)])
+        except KeyError:
+            unknown_raises = True
+        print(json.dumps({
+            "ok": bool(ok),
+            "tenants": sorted(outputs),
+            "tenant_entries": [engine.cache.tenant_len("a") > 0,
+                               engine.cache.tenant_len("b") > 0],
+            "unknown_raises": unknown_raises}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"]
+    assert rec["tenants"] == ["a", "b"]
+    assert rec["tenant_entries"] == [True, True]
+    assert rec["unknown_raises"]
+
+
 def test_compressed_psum_close_to_exact():
     out = run_sub("""
         from repro.distributed.compression import make_compressed_grad_fn

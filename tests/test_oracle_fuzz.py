@@ -23,7 +23,8 @@ from repro.core import (BatchPathEnum, PathEnum, build_index,
                         enumerate_paths_idx, enumerate_paths_join,
                         from_edges, oracle)
 from repro.core.graph import PAD
-from repro.serving import AsyncHcPEServer, PathQueryRequest
+from repro.serving import (AsyncHcPEServer, GraphRegistry, HcPEServer,
+                           PathQueryRequest)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -138,6 +139,71 @@ def test_async_server_matches_oracle(seed):
         got = oracle.paths_as_set(
             tuple(int(x) for x in row if x != PAD) for row in rows)
         assert got == want, (q.s, q.t, q.k)
+        assert r.count == len(want)
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant: two graphs behind one server, exact per-tenant path sets
+# ---------------------------------------------------------------------------
+
+def _paths_of(resp, k):
+    rows = resp.paths if resp.paths is not None else np.zeros((0, k + 1))
+    return oracle.paths_as_set(
+        tuple(int(x) for x in row if x != PAD) for row in rows)
+
+
+def _cross_tenant_workload(seed):
+    """Two random tenant graphs + an interleaved count_only=False request
+    stream over both (including same-(s,t,k) collisions across tenants,
+    the case a mis-keyed cache would get wrong)."""
+    g_a, s_a, t_a, k_a = _random_case(seed)
+    g_b, s_b, t_b, k_b = _random_case(seed + 100_000)
+    rng = np.random.default_rng(seed)
+    reqs = [PathQueryRequest(uid=0, s=s_a, t=t_a, k=k_a, count_only=False,
+                             graph_id="a"),
+            PathQueryRequest(uid=1, s=s_b, t=t_b, k=k_b, count_only=False,
+                             graph_id="b")]
+    n_min = min(g_a.n, g_b.n)
+    while len(reqs) < 8:
+        s, t = map(int, rng.choice(n_min, 2, replace=False))
+        k = int(rng.integers(2, 6))
+        # the SAME (s, t, k) submitted against BOTH tenants
+        reqs.append(PathQueryRequest(uid=len(reqs), s=s, t=t, k=k,
+                                     count_only=False, graph_id="a"))
+        reqs.append(PathQueryRequest(uid=len(reqs), s=s, t=t, k=k,
+                                     count_only=False, graph_id="b"))
+    registry = GraphRegistry()
+    registry.register("a", g_a)
+    registry.register("b", g_b)
+    return registry, {"a": g_a, "b": g_b}, reqs
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_cross_tenant_sync_server_matches_oracle(seed):
+    registry, graphs, reqs = _cross_tenant_workload(7000 + seed)
+    resps, report = HcPEServer(registry).serve(reqs)
+    for r, q in zip(resps, reqs):
+        want = oracle.paths_as_set(
+            oracle.enumerate_paths(graphs[q.graph_id], q.s, q.t, q.k))
+        assert _paths_of(r, q.k) == want, (q.graph_id, q.s, q.t, q.k)
+        assert r.count == len(want)
+    # both tenants' cache traffic is visible and sums to the batch delta
+    assert set(report.tenant_cache) == {"a", "b"}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(6))
+def test_cross_tenant_async_server_matches_oracle(seed):
+    registry, graphs, reqs = _cross_tenant_workload(8000 + seed)
+
+    async def drive():
+        async with AsyncHcPEServer(registry, batch_window_ms=1.0) as srv:
+            return await srv.serve(reqs)
+
+    for r, q in zip(asyncio.run(drive()), reqs):
+        want = oracle.paths_as_set(
+            oracle.enumerate_paths(graphs[q.graph_id], q.s, q.t, q.k))
+        assert _paths_of(r, q.k) == want, (q.graph_id, q.s, q.t, q.k)
         assert r.count == len(want)
 
 

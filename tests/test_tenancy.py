@@ -1,0 +1,320 @@
+"""Multi-graph tenancy (DESIGN.md §8): registry, isolation, quotas.
+
+The acceptance contract: two registered tenant graphs served through
+both ``HcPEServer.serve`` and ``AsyncHcPEServer`` return byte-identical
+path sets to per-graph single-tenant runs, with per-tenant cache stats
+and quota rejections observable in the responses/reports — and
+single-graph callers run unchanged under ``DEFAULT_GRAPH_ID``.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_GRAPH_ID, PathEnum, erdos_renyi, power_law
+from repro.core.graph import PAD
+from repro.serving import (AsyncHcPEServer, GraphRegistry, HcPEServer,
+                           PathQueryRequest, STATUS_OK,
+                           STATUS_REJECTED_TENANT_QUOTA,
+                           STATUS_REJECTED_UNKNOWN_GRAPH)
+
+
+def _requests(g, graph_id, count, rng, k=4, uid0=0, **kw):
+    reqs = []
+    while len(reqs) < count:
+        s, t = rng.integers(0, g.n, 2)
+        if s != t:
+            reqs.append(PathQueryRequest(uid=uid0 + len(reqs), s=int(s),
+                                         t=int(t), k=k, graph_id=graph_id,
+                                         **kw))
+    return reqs
+
+
+def _two_tenants():
+    return erdos_renyi(70, 4.0, seed=3), power_law(90, 5.0, seed=8)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_register_retire_lookup():
+    g_a, g_b = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("a", g_a)
+    entry = reg.register("b", g_b, cache_quota=7, max_pending=3)
+    assert set(reg.graph_ids()) == {"a", "b"}
+    assert "a" in reg and len(reg) == 2
+    assert reg.get("b") is g_b
+    assert (entry.cache_quota, entry.max_pending) == (7, 3)
+    retired = reg.retire("a")
+    assert retired.graph is g_a
+    assert "a" not in reg
+    with pytest.raises(KeyError):
+        reg.get("a")
+
+
+def test_registry_empty_graph_id_rejected():
+    with pytest.raises(ValueError):
+        GraphRegistry().register("", erdos_renyi(10, 2.0, seed=0))
+
+
+def test_registry_binds_quota_to_engine_cache():
+    g_a, g_b = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("a", g_a, cache_quota=2)
+    server = HcPEServer(reg)                       # binds its engine
+    assert server.engine.cache.quota_for("a") == 2
+    # registering after binding propagates too
+    reg.register("b", g_b, cache_quota=5)
+    assert server.engine.cache.quota_for("b") == 5
+
+
+def test_retire_drops_tenant_cache_entries():
+    g_a, g_b = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("a", g_a)
+    reg.register("b", g_b)
+    server = HcPEServer(reg)
+    rng = np.random.default_rng(0)
+    server.serve(_requests(g_a, "a", 4, rng) + _requests(g_b, "b", 4, rng,
+                                                         uid0=4))
+    cache = server.engine.cache
+    assert cache.tenant_len("a") > 0 and cache.tenant_len("b") > 0
+    reg.retire("a")
+    assert cache.tenant_len("a") == 0              # purged from the engine
+    assert cache.tenant_len("b") > 0               # neighbor untouched
+
+
+def test_reregister_same_id_invalidates_old_graph_entries():
+    """Replacing a tenant's graph must drop indexes built on the old one —
+    they would answer queries against the wrong graph."""
+    g_old, g_new = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("x", g_old)
+    server = HcPEServer(reg)
+    rng = np.random.default_rng(1)
+    server.serve(_requests(g_old, "x", 3, rng))
+    assert server.engine.cache.tenant_len("x") > 0
+    reg.register("x", g_new)
+    assert server.engine.cache.tenant_len("x") == 0
+    # fresh queries hit the new graph, byte-identical to a solo engine
+    reqs = _requests(g_new, "x", 5, rng)
+    resps, _ = server.serve(reqs)
+    seq = PathEnum()
+    for r, q in zip(resps, reqs):
+        assert r.count == seq.count(g_new, q.s, q.t, q.k)
+
+
+# ---------------------------------------------------------------------------
+# sync server: two tenants == two single-tenant runs, byte-identical
+# ---------------------------------------------------------------------------
+
+def test_sync_two_tenants_byte_identical_to_single_tenant_runs():
+    g_a, g_b = _two_tenants()
+    rng = np.random.default_rng(7)
+    reqs_a = _requests(g_a, "a", 8, rng, count_only=False)
+    reqs_b = _requests(g_b, "b", 8, rng, uid0=8, count_only=False)
+
+    reg = GraphRegistry()
+    reg.register("a", g_a)
+    reg.register("b", g_b)
+    interleaved = [r for pair in zip(reqs_a, reqs_b) for r in pair]
+    resps, report = HcPEServer(reg).serve(interleaved)
+
+    # per-graph single-tenant baselines (default graph_id path)
+    solo_a, _ = HcPEServer(g_a).serve(
+        [PathQueryRequest(uid=r.uid, s=r.s, t=r.t, k=r.k, count_only=False)
+         for r in reqs_a])
+    solo_b, _ = HcPEServer(g_b).serve(
+        [PathQueryRequest(uid=r.uid, s=r.s, t=r.t, k=r.k, count_only=False)
+         for r in reqs_b])
+    solo = {r.uid: r for r in solo_a + solo_b}
+
+    assert [r.uid for r in resps] == [q.uid for q in interleaved]
+    for r, q in zip(resps, interleaved):
+        assert r.status == STATUS_OK and r.graph_id == q.graph_id
+        want = solo[r.uid]
+        assert r.count == want.count
+        if want.paths is None:
+            assert r.paths is None or r.paths.shape[0] == 0
+        else:  # exact path sets, not just counts
+            assert sorted(map(tuple, r.paths.tolist())) == \
+                sorted(map(tuple, want.paths.tolist()))
+    # per-tenant cache stats are observable and partition the batch delta
+    assert set(report.tenant_cache) == {"a", "b"}
+    assert report.tenant_cache["a"].misses + \
+        report.tenant_cache["b"].misses == report.cache.misses
+
+
+def test_sync_unknown_graph_is_rejection_response():
+    g_a, _ = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("a", g_a)
+    reqs = [PathQueryRequest(uid=0, s=0, t=1, k=3, graph_id="a"),
+            PathQueryRequest(uid=1, s=0, t=1, k=3, graph_id="ghost")]
+    resps, report = HcPEServer(reg).serve(reqs)
+    assert resps[0].status == STATUS_OK
+    assert resps[1].status == STATUS_REJECTED_UNKNOWN_GRAPH
+    assert resps[1].rejected and resps[1].count == 0
+    assert resps[1].graph_id == "ghost"
+    assert report.batch_size == 1                  # rejected did no work
+    assert report.distinct_queries == 1
+
+
+def test_single_graph_caller_unchanged_default_graph_id():
+    """The compatibility contract: a bare-graph server is the default
+    tenant, requests without graph_id serve against it, and the engine's
+    cache keys carry DEFAULT_GRAPH_ID."""
+    g = erdos_renyi(50, 4.0, seed=11)
+    server = HcPEServer(g)
+    assert server.graph is g
+    reqs = _requests(g, DEFAULT_GRAPH_ID, 5, np.random.default_rng(2))
+    resps, report = server.serve(reqs)
+    seq = PathEnum()
+    for r, q in zip(resps, reqs):
+        assert r.graph_id == DEFAULT_GRAPH_ID
+        assert r.count == seq.count(g, q.s, q.t, q.k)
+    assert set(report.tenant_cache) == {DEFAULT_GRAPH_ID}
+
+
+def test_tenants_with_same_stk_do_not_share_cache_entries():
+    """Two tenants issuing the same (s, t, k) must each build (and hit)
+    their own index — a shared entry would answer one tenant's query on
+    the other tenant's graph."""
+    g_a, g_b = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("a", g_a)
+    reg.register("b", g_b)
+    server = HcPEServer(reg)
+    reqs = [PathQueryRequest(uid=0, s=2, t=5, k=4, graph_id="a"),
+            PathQueryRequest(uid=1, s=2, t=5, k=4, graph_id="b")]
+    resps, report = server.serve(reqs)
+    # both missed: no cross-tenant sharing despite identical (s, t, k)
+    assert report.tenant_cache["a"].misses == 1
+    assert report.tenant_cache["b"].misses == 1
+    seq = PathEnum()
+    assert resps[0].count == seq.count(g_a, 2, 5, 4)
+    assert resps[1].count == seq.count(g_b, 2, 5, 4)
+    # warm repeat: each tenant hits its own entry
+    _, warm = server.serve(reqs)
+    assert warm.tenant_cache["a"].hits == 1
+    assert warm.tenant_cache["b"].hits == 1
+    assert warm.cache.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# async server: tenancy through admission + micro-batching
+# ---------------------------------------------------------------------------
+
+def test_async_two_tenants_byte_identical_to_single_tenant_runs():
+    g_a, g_b = _two_tenants()
+    rng = np.random.default_rng(9)
+    reqs_a = _requests(g_a, "a", 6, rng, count_only=False)
+    reqs_b = _requests(g_b, "b", 6, rng, uid0=6, count_only=False)
+    interleaved = [r for pair in zip(reqs_a, reqs_b) for r in pair]
+
+    reg = GraphRegistry()
+    reg.register("a", g_a)
+    reg.register("b", g_b)
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=2.0) as srv:
+            resps = await srv.serve(interleaved)
+            return resps, srv.drain_report()
+
+    resps, report = asyncio.run(drive())
+    seq = PathEnum()
+    graphs = {"a": g_a, "b": g_b}
+    for r, q in zip(resps, interleaved):
+        assert r.status == STATUS_OK and r.graph_id == q.graph_id
+        want = sorted(seq.query(graphs[q.graph_id], q.s, q.t,
+                                q.k).result.as_tuples())
+        rows = r.paths if r.paths is not None else np.zeros((0, q.k + 1))
+        got = sorted(tuple(int(x) for x in row if x != PAD) for row in rows)
+        assert got == want                       # exact per-tenant path sets
+        assert r.count == len(want)
+    # micro-batches never mixed tenants; per-tenant stats observable
+    assert set(report.tenant_cache) <= {"a", "b"}
+    assert report.tenant_cache["a"].lookups > 0
+    assert report.tenant_cache["b"].lookups > 0
+
+
+def test_async_unknown_graph_rejected_at_admission():
+    g_a, _ = _two_tenants()
+
+    async def drive():
+        async with AsyncHcPEServer(g_a) as srv:
+            resp = await srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=3,
+                                                     graph_id="ghost"))
+            return resp, srv.stats
+
+    resp, stats = asyncio.run(drive())
+    assert resp.status == STATUS_REJECTED_UNKNOWN_GRAPH
+    assert stats.rejected_unknown_graph == 1
+
+
+def test_async_per_tenant_quota_rejection():
+    """One tenant floods past its registry max_pending while the other
+    tenant's requests sail through — per-tenant admission, not global."""
+    g_a, g_b = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("flooded", g_a, max_pending=1)
+    reg.register("calm", g_b)
+
+    flood = [PathQueryRequest(uid=i, s=0, t=1 + i, k=3, graph_id="flooded")
+             for i in range(4)]
+    calm = [PathQueryRequest(uid=10 + i, s=0, t=1 + i, k=3, graph_id="calm")
+            for i in range(3)]
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=10.0) as srv:
+            return await srv.serve(flood + calm), srv.stats
+
+    resps, stats = asyncio.run(drive())
+    flood_status = [r.status for r in resps[:4]]
+    assert flood_status[0] == STATUS_OK
+    assert flood_status.count(STATUS_REJECTED_TENANT_QUOTA) == 3
+    assert all(r.status == STATUS_OK for r in resps[4:])
+    assert stats.rejected_tenant_quota == 3
+
+
+def test_async_server_wide_tenant_quota_default():
+    """max_pending_per_graph applies to tenants without their own
+    registry quota."""
+    g_a, _ = _two_tenants()
+
+    async def drive():
+        async with AsyncHcPEServer(g_a, batch_window_ms=10.0,
+                                   max_pending_per_graph=2) as srv:
+            reqs = [PathQueryRequest(uid=i, s=0, t=1 + i, k=3)
+                    for i in range(5)]
+            return await srv.serve(reqs)
+
+    resps = asyncio.run(drive())
+    statuses = [r.status for r in resps]
+    assert statuses.count(STATUS_OK) == 2
+    assert statuses.count(STATUS_REJECTED_TENANT_QUOTA) == 3
+
+
+def test_async_tenant_retired_mid_flight_fails_soft():
+    """A tenant retired between admission and dispatch resolves to
+    unknown-graph rejections, and the scheduler keeps serving others."""
+    g_a, g_b = _two_tenants()
+    reg = GraphRegistry()
+    reg.register("doomed", g_a)
+    reg.register("stable", g_b)
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=30.0) as srv:
+            doomed = asyncio.ensure_future(srv.submit(
+                PathQueryRequest(uid=0, s=0, t=1, k=3, graph_id="doomed")))
+            await asyncio.sleep(0.005)           # admitted; batch in window
+            reg.retire("doomed")
+            stable = await srv.submit(
+                PathQueryRequest(uid=1, s=0, t=1, k=3, graph_id="stable"))
+            return await doomed, stable
+
+    doomed, stable = asyncio.run(drive())
+    assert doomed.status == STATUS_REJECTED_UNKNOWN_GRAPH
+    assert stable.status == STATUS_OK
