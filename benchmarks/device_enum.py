@@ -1,0 +1,42 @@
+"""fig_device_enum — host vs device IDX-DFS enumeration, end to end.
+
+The trajectory row for DESIGN.md §9: the same `enumerate_paths_idx` walk
+with frontier expansion on the host (numpy) and on the device backend
+(the Pallas kernel — interpreted on this CPU container, Mosaic on TPU),
+over two workload graphs from workloads.py.  Counts are asserted equal,
+so the wall numbers always compare identical work; the derived column
+records the Fig.-6 counters the kernel returned as device scalars.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import build_index, enumerate_paths_idx
+
+from .workloads import GRAPHS, high_degree_queries
+
+Row = Tuple[str, float, str]
+
+WORKLOADS = (("dag", 5), ("dense", 4))
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for gname, k in WORKLOADS:
+        g = GRAPHS[gname]()
+        s, t = high_degree_queries(g, 1, seed=11)[0]
+        idx = build_index(g, s, t, k)
+        res = {}
+        for backend in ("host", "device"):
+            t0 = time.perf_counter()
+            res[backend] = enumerate_paths_idx(idx, count_only=True,
+                                               backend=backend)
+            ms = (time.perf_counter() - t0) * 1e3
+            st = res[backend].stats
+            rows.append((f"fig_device_enum/{gname}_{backend}_ms", ms,
+                         f"results={res[backend].count};"
+                         f"edges={st.edges_accessed};chunks={st.chunks}"))
+        assert res["host"].count == res["device"].count, gname
+        assert res["host"].stats == res["device"].stats, gname
+    return rows

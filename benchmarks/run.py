@@ -29,6 +29,8 @@ def main() -> None:
     suites.append(("fig_response_time", response_time.run))
     from . import tenancy
     suites.append(("tenancy", tenancy.run))
+    from . import device_enum
+    suites.append(("fig_device_enum", device_enum.run))
     suites.append(("kernels", kernels_bench.run))
     suites.append(("roofline", roofline.run))
     if not args.skip_collectives:

@@ -2,10 +2,12 @@
 enumerators) as a composable JAX/numpy engine.  See DESIGN.md §1-2."""
 
 from .graph import Graph, from_edges, erdos_renyi, power_law, layered_dag, grid, complete
-from .index import LightweightIndex, build_index, build_index_jax
+from .index import (DeviceIndexArrays, LightweightIndex, build_index,
+                    build_index_jax)
 from .estimator import preliminary_estimate, walk_count_dp, WalkCountDP
 from .planner import Plan, plan_query, DEFAULT_TAU
-from .enumerate import EnumResult, EnumStats, EngineLimit, enumerate_paths_idx
+from .enumerate import (EnumResult, EnumStats, EngineLimit,
+                        enumerate_paths_idx, resolve_backend)
 from .join import enumerate_paths_join
 from .pathenum import PathEnum, QueryOutput, QueryTiming
 from .batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
@@ -23,5 +25,5 @@ __all__ = [
     "QueryTiming", "generic_dfs", "oracle", "constraints", "relations",
     "BatchPathEnum", "BatchOutput", "BatchItem", "BatchTiming", "CacheStats",
     "IndexCache", "batched_index_distances", "edge_mask_hash",
-    "DEFAULT_GRAPH_ID", "tenant_of",
+    "DEFAULT_GRAPH_ID", "tenant_of", "DeviceIndexArrays", "resolve_backend",
 ]

@@ -37,7 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import planner as planner_mod
-from .enumerate import EnumResult, enumerate_paths_idx
+from .enumerate import EnumResult, EnumStats, enumerate_paths_idx
 from .graph import Graph
 from .index import LightweightIndex, build_index
 from .join import enumerate_paths_join
@@ -373,6 +373,22 @@ class BatchOutput:
         return np.array([it.result.count for it in self.items], np.int64)
 
     @property
+    def enum_stats(self) -> EnumStats:
+        """Merged Fig.-6 enumeration counters (edges accessed, partials,
+        invalid partials, results, chunks) across the batch's *distinct*
+        results — deduplicated items share their twin's ``EnumResult``
+        object and are counted once, so the merge reflects work done,
+        not work served."""
+        agg = EnumStats()
+        seen = set()
+        for it in self.items:
+            if id(it.result) in seen:
+                continue
+            seen.add(id(it.result))
+            agg.merge(it.result.stats)
+        return agg
+
+    @property
     def total_results(self) -> int:
         """Sum of all per-query counts."""
         return int(self.counts.sum())
@@ -403,15 +419,17 @@ class BatchPathEnum:
     each ``run`` names its tenant via ``graph_id`` and the cache keeps the
     tenants' entries apart, so one engine (one LRU, one set of knobs)
     serves a whole ``GraphRegistry``.  ``engine`` parameters mirror
-    PathEnum.
+    PathEnum, including the ``backend`` knob steering IDX-DFS expansion
+    onto the host or the Pallas device kernel (DESIGN.md §9).
     """
 
     def __init__(self, tau: float = DEFAULT_TAU, chunk_size: int = 16384,
                  max_partials: Optional[int] = 20_000_000,
                  cache_capacity: int = 256, bfs_block: int = 128,
-                 tenant_quotas: Optional[Dict[str, int]] = None):
+                 tenant_quotas: Optional[Dict[str, int]] = None,
+                 backend: str = "host"):
         self.engine = PathEnum(tau=tau, chunk_size=chunk_size,
-                               max_partials=max_partials)
+                               max_partials=max_partials, backend=backend)
         self.cache = IndexCache(capacity=cache_capacity,
                                 tenant_quotas=tenant_quotas)
         self.bfs_block = bfs_block
@@ -481,7 +499,8 @@ class BatchPathEnum:
         if plan.method == "dfs":
             return enumerate_paths_idx(idx, chunk_size=self.engine.chunk_size,
                                        count_only=count_only, first_n=first_n,
-                                       deadline=deadline)
+                                       deadline=deadline,
+                                       backend=self.engine.backend)
         return enumerate_paths_join(idx, cut=plan.cut, count_only=count_only,
                                     first_n=first_n,
                                     max_partials=self.engine.max_partials,

@@ -15,10 +15,19 @@ Semantics are identical to Algorithm 4:
 Instrumentation mirrors the paper's Fig. 6 metrics: #edges accessed,
 #invalid partials (generated partials that never reach any result — here:
 dup-pruned expansions plus dead-end rows), #results.
+
+Two expansion backends share this driver loop (DESIGN.md §9): ``host``
+runs `_expand_chunk` in numpy; ``device`` runs the same hop as a Pallas
+kernel (kernels/frontier_expand, via kernels/ops.frontier_expand) over
+fixed-width PAD-padded chunks, with the Fig.-6 counters coming back as
+device scalars.  ``auto`` picks the device for small k and dense
+frontiers and falls back to the host otherwise (`resolve_backend`).
+Results, stats and chunk boundaries are bit-identical across backends.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Iterator, List, Optional, Tuple
 
@@ -26,6 +35,42 @@ import numpy as np
 
 from .graph import PAD
 from .index import LightweightIndex
+
+# Auto-selection rule for backend="auto" (DESIGN.md §9): the device wins
+# when chunks are wide (dense frontiers — many index edges feeding each
+# hop) and the path matrix is narrow (small k keeps the fixed-width
+# layout and the prefix compare cheap).  On CPU the kernel only runs in
+# interpret mode, so auto never picks it there unless forced for CI
+# (REPRO_DEVICE_ENUM=force).
+DEVICE_AUTO_MAX_K = 8
+DEVICE_AUTO_MIN_EDGES = 2048
+
+
+def resolve_backend(idx: LightweightIndex, backend: Optional[str],
+                    constraint=None) -> str:
+    """Resolve a requested backend to the one that will run (DESIGN.md §9
+    fallback matrix).  Constraints are host-only state machines, so any
+    constrained query runs on the host; ``auto`` additionally requires
+    small k, a dense-enough index, and a real accelerator (or
+    ``REPRO_DEVICE_ENUM=force``, which lets CPU CI cover the device leg
+    in interpret mode)."""
+    if backend is not None and backend not in ("host", "device", "auto"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend is None or backend == "host":
+        return "host"
+    if constraint is not None:
+        return "host"
+    if backend == "device":
+        return "device"
+    # backend == "auto"
+    if idx.k > DEVICE_AUTO_MAX_K:
+        return "host"
+    if idx.num_index_edges < DEVICE_AUTO_MIN_EDGES:
+        return "host"
+    if os.environ.get("REPRO_DEVICE_ENUM") == "force":
+        return "device"
+    import jax
+    return "device" if jax.default_backend() != "cpu" else "host"
 
 
 class EngineLimit(RuntimeError):
@@ -109,6 +154,7 @@ def enumerate_paths_idx(
     max_results: Optional[int] = None,
     constraint=None,
     deadline: Optional[float] = None,
+    backend: Optional[str] = None,
 ) -> EnumResult:
     """Enumerate P(s,t,k,G) from the light-weight index (Algorithm 4).
 
@@ -121,8 +167,40 @@ def enumerate_paths_idx(
     — the anytime contract of ``first_n``, keyed on time instead of
     count.  Emitted results are never discarded, so the return value is
     always a correct (possibly partial) subset of the full result set.
+
+    ``backend`` selects where frontier expansion runs (DESIGN.md §9):
+    ``"host"``/None (numpy, the default), ``"device"`` (the Pallas
+    frontier kernel; constrained queries fall back to the host), or
+    ``"auto"`` (`resolve_backend`'s small-k/dense-frontier rule).  Both
+    backends plug an expansion step into the one driver loop below, so
+    paths, counts, ``EnumStats`` and chunk boundaries are identical by
+    construction — only the expansion engine changes.
     """
-    k, s, t = idx.k, idx.s, idx.t
+    if resolve_backend(idx, backend, constraint) == "device":
+        step = _device_step(idx)          # resolve guarantees no constraint
+        constraint = None
+    else:
+        step = _host_step(idx, constraint)
+    return _drive(idx, step, chunk_size=chunk_size, count_only=count_only,
+                  first_n=first_n, max_results=max_results,
+                  constraint=constraint, deadline=deadline)
+
+
+def _drive(idx: LightweightIndex, step, chunk_size: int, count_only: bool,
+           first_n: Optional[int], max_results: Optional[int], constraint,
+           deadline: Optional[float]) -> EnumResult:
+    """The backend-independent IDX-DFS driver (DESIGN.md §9).
+
+    Owns every anytime contract — the LIFO chunk walk, the per-chunk
+    deadline check, first_n's exact-n trim, the max_results limit, and
+    chunk_size splitting — so host and device expansion cannot diverge
+    on them.  ``step(paths, depth, cstate, stats, want_cont)`` performs
+    one hop for one chunk and returns ``None`` (chunk fully dead, stats
+    already updated) or ``(emit_rows, cont_rows, cont_state)`` with rows
+    in emission order; ``want_cont`` is False on the last hop, where
+    survivors could never be extended.
+    """
+    k, s = idx.k, idx.s
     stats = EnumStats()
     out_paths: List[np.ndarray] = []
     out_lens: List[np.ndarray] = []
@@ -140,9 +218,47 @@ def enumerate_paths_idx(
                              exhausted=False)
         paths, depth, cstate = work.pop()
         stats.chunks += 1
-        expanded = _expand_chunk(idx, paths, depth, stats)
+        expanded = step(paths, depth, cstate, stats, depth + 1 < k)
         if expanded is None:
             continue
+        emit_rows, cont_rows, cont_state = expanded
+
+        if emit_rows is not None and emit_rows.shape[0]:
+            count += emit_rows.shape[0]
+            stats.results += emit_rows.shape[0]
+            if not count_only:
+                out_paths.append(emit_rows)
+                out_lens.append(np.full(emit_rows.shape[0], depth + 1,
+                                        np.int32))
+            if max_results is not None and count > max_results:
+                raise EngineLimit(f"more than {max_results} results")
+            if first_n is not None and count >= first_n:
+                count = _trim_to_first_n(out_paths, out_lens, count,
+                                         first_n, count_only, stats)
+                return _finalize(idx, out_paths, out_lens, count, stats,
+                                 exhausted=False)
+
+        if cont_rows is not None and cont_rows.shape[0]:
+            # split into chunks; push in reverse so earlier rows pop first
+            pieces = range(0, cont_rows.shape[0], chunk_size)
+            for st in reversed(list(pieces)):
+                sl = slice(st, st + chunk_size)
+                piece_cs = constraint.slice(cont_state, sl) \
+                    if constraint is not None else None
+                work.append((cont_rows[sl], depth + 1, piece_cs))
+
+    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+
+
+def _host_step(idx: LightweightIndex, constraint):
+    """The numpy expansion step: `_expand_chunk` plus the Appendix-E
+    constraint machinery (extend/accept/gather), folded to the driver's
+    (emit_rows, cont_rows, cont_state) contract."""
+
+    def step(paths, depth, cstate, stats, want_cont):
+        expanded = _expand_chunk(idx, paths, depth, stats)
+        if expanded is None:
+            return None
         parent, pos, vnew, emit, cont = expanded
 
         if constraint is not None:
@@ -155,6 +271,12 @@ def enumerate_paths_idx(
         else:
             cstate_new = None
 
+        def rows_of(sel):
+            rows = paths[parent[sel]].copy()
+            rows[:, depth + 1] = vnew[sel]
+            return rows
+
+        emit_rows = None
         if emit.any():
             sel = np.nonzero(emit)[0]
             if constraint is not None:
@@ -162,34 +284,97 @@ def enumerate_paths_idx(
                 stats.invalid_partials += int((~acc).sum())
                 sel = sel[acc]
             if sel.size:
-                rows = paths[parent[sel]].copy()
-                rows[:, depth + 1] = vnew[sel]
-                count += rows.shape[0]
-                stats.results += rows.shape[0]
-                if not count_only:
-                    out_paths.append(rows)
-                    out_lens.append(np.full(rows.shape[0], depth + 1, np.int32))
-                if max_results is not None and count > max_results:
-                    raise EngineLimit(f"more than {max_results} results")
-                if first_n is not None and count >= first_n:
-                    count = _trim_to_first_n(out_paths, out_lens, count,
-                                             first_n, count_only, stats)
-                    return _finalize(idx, out_paths, out_lens, count, stats,
-                                     exhausted=False)
+                emit_rows = rows_of(sel)
 
-        if depth + 1 < k and cont.any():
+        cont_rows, cont_state = None, None
+        if want_cont and cont.any():
             sel = np.nonzero(cont)[0]
-            rows = paths[parent[sel]].copy()
-            rows[:, depth + 1] = vnew[sel]
-            cs = constraint.gather(cstate_new, sel) if constraint is not None else None
-            # split into chunks; push in reverse so earlier rows pop first
-            pieces = range(0, rows.shape[0], chunk_size)
-            for st in reversed(list(pieces)):
-                sl = slice(st, st + chunk_size)
-                piece_cs = constraint.slice(cs, sl) if constraint is not None else None
-                work.append((rows[sl], depth + 1, piece_cs))
+            cont_rows = rows_of(sel)
+            cont_state = constraint.gather(cstate_new, sel) \
+                if constraint is not None else None
+        return emit_rows, cont_rows, cont_state
 
-    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+    return step
+
+
+# Per-kernel-launch candidate-slot budget: a chunk whose (rows × padded
+# fan-out) rectangle exceeds it is cut into contiguous row segments, so
+# one hub vertex in a wide chunk cannot inflate the dense slot matrices
+# past memory (the host path's work is proportional to actual candidates;
+# the device rectangle is rows × max fan-out).  Segment outputs
+# concatenate in row order, so emission order — and therefore every
+# first_n prefix — is unchanged.
+DEVICE_SLOT_BUDGET = 1 << 19
+
+
+def _fanout_segments(cnt: np.ndarray, budget: int) -> List[Tuple[int, int]]:
+    """Contiguous [start, end) row segments whose rows × next-pow2(max
+    fan-out) rectangles each fit the slot budget (single rows always
+    form a valid segment)."""
+    # common case first, vectorized: the whole chunk's rectangle fits,
+    # so the O(rows) scan below never runs on ordinary chunks
+    whole = 1 << (max(int(cnt.max(initial=0)), 1) - 1).bit_length()
+    if cnt.shape[0] * whole <= budget:
+        return [(0, cnt.shape[0])]
+    segments: List[Tuple[int, int]] = []
+    start, seg_max = 0, 1
+    for i in range(cnt.shape[0]):
+        c = max(int(cnt[i]), 1)
+        new_max = max(seg_max, 1 << (c - 1).bit_length())
+        if i > start and (i - start + 1) * new_max > budget:
+            segments.append((start, i))
+            start, seg_max = i, 1 << (c - 1).bit_length()
+        else:
+            seg_max = new_max
+    segments.append((start, cnt.shape[0]))
+    return segments
+
+
+def _device_step(idx: LightweightIndex):
+    """The Pallas expansion step (DESIGN.md §9): one kernel launch per
+    fan-out segment of the chunk, Fig.-6 counters accumulated from the
+    kernel's device scalars.  The host keeps two cheap responsibilities:
+    sizing segments off the offset arrays (which also shortcuts all-dead
+    chunks without a launch), and the driver's usual splitting."""
+    from ..kernels import ops as kops   # lazy: pallas only on this path
+    k, t = idx.k, idx.t
+    dev = idx.device_arrays()
+
+    def step(paths, depth, cstate, stats, want_cont):
+        last = paths[:, depth].astype(np.int64)
+        b = k - depth - 1
+        cnt = (idx.fwd_end[last, b] - idx.fwd_begin[last]) if b >= 0 \
+            else np.zeros(paths.shape[0], np.int64)
+        if int(cnt.sum()) == 0:
+            stats.invalid_partials += paths.shape[0]
+            return None
+        emit_parts: List[np.ndarray] = []
+        cont_parts: List[np.ndarray] = []
+        for lo, hi in _fanout_segments(cnt, DEVICE_SLOT_BUDGET):
+            emit_rows, cont_rows, n_emit, n_cont, counters = \
+                kops.frontier_expand(paths[lo:hi], dev.begin, dev.end,
+                                     dev.dst, depth=depth, t=t,
+                                     max_deg=max(int(cnt[lo:hi].max()), 1),
+                                     want_cont=want_cont)
+            edges, partials, invalid, _ = (int(x) for x in
+                                           np.asarray(counters))
+            stats.edges_accessed += edges
+            stats.partials_generated += partials
+            stats.invalid_partials += invalid
+            ne, nc = int(n_emit), int(n_cont)
+            if ne:
+                emit_parts.append(np.asarray(emit_rows[:ne]))
+            if want_cont and nc:
+                cont_parts.append(np.asarray(cont_rows[:nc]))
+        # one array per chunk, like the host step: _trim_to_first_n
+        # trims only the driver's last appended block
+        emit_out = (np.concatenate(emit_parts, axis=0)
+                    if emit_parts else None)
+        cont_out = (np.concatenate(cont_parts, axis=0)
+                    if cont_parts else None)
+        return emit_out, cont_out, None
+
+    return step
 
 
 def _trim_to_first_n(out_paths, out_lens, count, first_n, count_only,

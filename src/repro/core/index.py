@@ -33,6 +33,18 @@ from .graph import Graph
 
 
 @dataclasses.dataclass
+class DeviceIndexArrays:
+    """Device (int32) copies of the forward index for the Pallas frontier
+    kernel (DESIGN.md §9): ``begin`` (n,), ``end`` (n, k+1) and ``dst``
+    (mf,).  ``dst`` is padded to at least one element so the kernel's
+    gather always has a valid extent; rows/fan-out padding is the
+    kernel wrapper's job (kernels/ops.frontier_expand)."""
+    begin: jnp.ndarray
+    end: jnp.ndarray
+    dst: jnp.ndarray
+
+
+@dataclasses.dataclass
 class LightweightIndex:
     n: int
     k: int
@@ -82,6 +94,26 @@ class LightweightIndex:
     @property
     def num_index_edges(self) -> int:
         return int(self.fwd_dst.shape[0])
+
+    def device_arrays(self) -> DeviceIndexArrays:
+        """The forward index as int32 device arrays for the frontier
+        kernel, built once and cached on the index (indexes are immutable
+        once built, DESIGN.md §9).  ``dst`` pads to the next power of two
+        with an inert −1 fill: its length is a traced shape of the jitted
+        kernel, so bucketing it keeps recompiles logarithmic in index
+        size instead of one per distinct (s, t, k) query."""
+        cached = self.__dict__.get("_device_arrays")
+        if cached is None:
+            mf = max(int(self.fwd_dst.shape[0]), 1)
+            mf_pad = 1 << (mf - 1).bit_length()
+            dst = np.full(mf_pad, -1, np.int32)
+            dst[: self.fwd_dst.shape[0]] = self.fwd_dst
+            cached = DeviceIndexArrays(
+                begin=jnp.asarray(self.fwd_begin.astype(np.int32)),
+                end=jnp.asarray(self.fwd_end.astype(np.int32)),
+                dst=jnp.asarray(dst))
+            self.__dict__["_device_arrays"] = cached
+        return cached
 
     def memory_bytes(self) -> int:
         tot = 0

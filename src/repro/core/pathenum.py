@@ -43,15 +43,23 @@ class QueryOutput:
 
 
 class PathEnum:
-    """Engine facade.  mode: "auto" (paper's optimizer), "dfs", "join"."""
+    """Engine facade.  mode: "auto" (paper's optimizer), "dfs", "join".
+
+    ``backend`` selects the DFS expansion engine (DESIGN.md §9):
+    "host" (numpy, default), "device" (Pallas frontier kernel) or "auto"
+    (small-k/dense-frontier rule).  Join plans always enumerate on the
+    host — the backend only steers IDX-DFS.
+    """
 
     def __init__(self, tau: float = DEFAULT_TAU, chunk_size: int = 16384,
                  use_jax_index: bool = False,
-                 max_partials: Optional[int] = 20_000_000):
+                 max_partials: Optional[int] = 20_000_000,
+                 backend: str = "host"):
         self.tau = tau
         self.chunk_size = chunk_size
         self.use_jax_index = use_jax_index
         self.max_partials = max_partials
+        self.backend = backend
 
     def build(self, graph: Graph, s: int, t: int, k: int,
               edge_mask=None) -> LightweightIndex:
@@ -62,7 +70,8 @@ class PathEnum:
     def query(self, graph: Graph, s: int, t: int, k: int,
               mode: str = "auto", count_only: bool = False,
               first_n: Optional[int] = None, constraint=None,
-              edge_mask=None, cut: Optional[int] = None) -> QueryOutput:
+              edge_mask=None, cut: Optional[int] = None,
+              backend: Optional[str] = None) -> QueryOutput:
         if k < 2:
             raise ValueError("paper assumes k >= 2")
         timing = QueryTiming()
@@ -89,7 +98,8 @@ class PathEnum:
         if plan.method == "dfs":
             res = enumerate_paths_idx(idx, chunk_size=self.chunk_size,
                                       count_only=count_only, first_n=first_n,
-                                      constraint=constraint)
+                                      constraint=constraint,
+                                      backend=backend or self.backend)
         else:
             res = enumerate_paths_join(idx, cut=plan.cut,
                                        count_only=count_only,

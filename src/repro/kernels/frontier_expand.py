@@ -1,0 +1,136 @@
+"""Device-resident IDX-DFS frontier expansion (DESIGN.md §9).
+
+Algorithm 4's hot loop — the per-hop offset gather from the light-weight
+index (``fwd_begin`` / ``fwd_end`` / ``fwd_dst``), the vectorized
+simple-path prefix compare, and the emit/continue partition — as one
+Pallas kernel over fixed-width ``(chunk, k+1)`` int32 path matrices.
+
+Layout contract (the padding/bucketing rules live in ops.frontier_expand):
+  * path rows are partial s→v walks at one common ``depth``; columns past
+    the depth hold PAD, and whole PAD rows (``paths[:, depth] == PAD``)
+    are inert padding — no candidates, no counter contributions.
+  * each row fans out into ``max_deg`` candidate slots; slot j of row r
+    is real iff ``j < |I_t(v_r, k - depth - 1)|`` (the O(1) budget read
+    off the offset matrix, done in-kernel).
+  * outputs are the candidate-vertex matrix plus emit/continue masks;
+    compaction into dense row matrices (and the device scalars n_emit /
+    n_cont) happens in the jit'd wrapper, ops.frontier_expand.
+  * the Fig.-6 counters accumulate across the row-block grid into one
+    ``(4,)`` int32 vector ``[edges_accessed, partials_generated,
+    invalid_partials, 0]`` — bit-identical to the host ``EnumStats``
+    deltas of core/enumerate._expand_chunk
+    (tests/test_frontier_kernel.py asserts the parity).
+
+On CPU the kernel runs through the Pallas interpreter (numerics only);
+on TPU the same call site compiles to Mosaic.  The gathers are dynamic
+(``jnp.take`` over the on-chip index arrays), so the kernel targets the
+small-k regime where the per-query index fits in VMEM — exactly the
+regime the §9 auto-selection rule routes here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Must agree with core.graph.PAD; tests/test_frontier_kernel.py pins it.
+PAD = -1
+
+# Row-block height of the expansion grid.  Chunks narrower than this run
+# as a single block; wider chunks (ops.frontier_expand pads rows to a
+# power of two) stream block by block.
+BLOCK_ROWS = 128
+
+
+def _frontier_kernel(meta_ref, paths_ref, begin_ref, endb_ref, dst_ref,
+                     vnew_ref, emit_ref, cont_ref, counters_ref, *,
+                     k1: int, max_deg: int, mf: int, pad: int):
+    """One row-block of one hop: gather → prefix-dedup → partition."""
+    depth = meta_ref[0]
+    t = meta_ref[1]
+    paths = paths_ref[...]                                  # (BR, k1)
+    last = jnp.take(paths, depth, axis=1)                   # (BR,)
+    valid = last != pad
+    lastc = jnp.where(valid, last, 0)
+    begin = jnp.take(begin_ref[...], lastc)                 # (BR,)
+    end = jnp.take(endb_ref[...], lastc)
+    cnt = jnp.where(valid, end - begin, 0)                  # |I_t(v, b)|
+    slot = jax.lax.broadcasted_iota(jnp.int32, (paths.shape[0], max_deg), 1)
+    in_range = slot < cnt[:, None]
+    pos = jnp.clip(begin[:, None] + slot, 0, mf - 1)
+    vnew = jnp.take(dst_ref[...], pos)                      # (BR, max_deg)
+
+    # simple-path check: v' must not appear in the row's depth+1 prefix
+    # (unrolled over the static path width; columns past `depth` masked)
+    dup = jnp.zeros_like(in_range)
+    for c in range(k1):
+        on_prefix = jnp.int32(c) <= depth
+        dup = dup | (on_prefix & (paths[:, c][:, None] == vnew))
+
+    is_t = vnew == t
+    emit = in_range & ~dup & is_t
+    cont = in_range & ~dup & ~is_t
+
+    # Fig. 6 deltas, matching core/enumerate._expand_chunk exactly:
+    # dup-pruned expansions plus rows none of whose expansions survived
+    alive = (emit | cont).any(axis=1)
+    dead = valid & ~alive
+    edges = jnp.sum(cnt)
+    invalid = (jnp.sum((dup & in_range).astype(jnp.int32))
+               + jnp.sum(dead.astype(jnp.int32)))
+
+    vnew_ref[...] = jnp.where(emit | cont, vnew, pad)
+    emit_ref[...] = emit.astype(jnp.int32)
+    cont_ref[...] = cont.astype(jnp.int32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counters_ref[...] = jnp.zeros_like(counters_ref)
+
+    counters_ref[...] += jnp.stack([edges, edges, invalid, jnp.int32(0)])
+
+
+@functools.partial(jax.jit, static_argnames=("max_deg", "interpret"))
+def frontier_expand_masks(paths, begin, endb, dst, meta, *, max_deg: int,
+                          interpret: bool = False):
+    """Raw kernel entry: masks + counters, no compaction.
+
+    paths (C, k+1) int32 with C a multiple of the row block (or smaller);
+    begin/endb (n,) int32 offset vectors (endb already sliced to the
+    budget column); dst (mf,) int32; meta = [depth, t] int32.  Returns
+    (vnew, emit, cont, counters) — see the module docstring for layout.
+    """
+    C, k1 = paths.shape
+    n = begin.shape[0]
+    mf = dst.shape[0]
+    br = C if C < BLOCK_ROWS else BLOCK_ROWS
+    assert C % br == 0, f"pad chunk rows C={C} to a multiple of {br}"
+    grid = (C // br,)
+    kern = functools.partial(_frontier_kernel, k1=k1, max_deg=max_deg,
+                             mf=mf, pad=PAD)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),            # meta [depth, t]
+            pl.BlockSpec((br, k1), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((mf,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((br, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((br, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((C, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((C, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((4,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, paths, begin, endb, dst)

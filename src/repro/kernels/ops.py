@@ -19,6 +19,7 @@ import numpy as np
 from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
+from .frontier_expand import PAD, frontier_expand_masks as _frontier_pallas
 from .semiring_spmm import BLOCK, counting_spmm as _counting_pallas
 from .semiring_spmm import minplus_spmv as _minplus_pallas
 
@@ -85,6 +86,99 @@ def bfs_dense(adj: jnp.ndarray, src: int | jnp.ndarray, k: int, *,
         return minplus_spmv(adj, d, inf=inf, block=block)
 
     return jax.lax.fori_loop(0, k, body, dist)
+
+
+# ---------------------------------------------------------------------------
+# IDX-DFS frontier expansion (device-resident enumeration, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length() if x > 1 else 1
+
+
+def _children(paths, vflat, idxs, depth, max_deg):
+    """Materialize child rows for the compacted candidate indices: gather
+    each candidate's parent row and write its vertex at column depth+1."""
+    rows = jnp.take(paths, idxs // max_deg, axis=0)          # (cap, k1)
+    col = jax.lax.broadcasted_iota(jnp.int32, rows.shape, 1)
+    return jnp.where(col == depth + 1, jnp.take(vflat, idxs)[:, None], rows)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_deg", "interpret", "use_ref",
+                                    "want_cont"))
+def _frontier_expand_jit(paths, begin, end, dst, meta, *, max_deg: int,
+                         interpret: bool, use_ref: bool, want_cont: bool):
+    """Masks (Pallas kernel or jnp ref) + compaction, one fused jit."""
+    C, k1 = paths.shape
+    depth = meta[0]
+    b = jnp.clip(k1 - 2 - depth, 0, k1 - 1)   # budget k - depth - 1
+    endb = jnp.take(end, b, axis=1)
+    if use_ref:
+        vnew, emit, cont, counters = ref.frontier_masks_ref(
+            paths, begin, endb, dst, depth, meta[1], max_deg, PAD)
+    else:
+        vnew, emit, cont, counters = _frontier_pallas(
+            paths, begin, endb, dst, meta, max_deg=max_deg,
+            interpret=interpret)
+    cap = C * max_deg
+    vflat = vnew.reshape(-1)
+    flat_emit = emit.reshape(-1) != 0
+    eidx = jnp.nonzero(flat_emit, size=cap, fill_value=0)[0]
+    emit_rows = _children(paths, vflat, eidx, depth, max_deg)
+    n_emit = jnp.sum(flat_emit.astype(jnp.int32))
+    if want_cont:
+        flat_cont = cont.reshape(-1) != 0
+        cidx = jnp.nonzero(flat_cont, size=cap, fill_value=0)[0]
+        cont_rows = _children(paths, vflat, cidx, depth, max_deg)
+        n_cont = jnp.sum(flat_cont.astype(jnp.int32))
+    else:
+        # last hop: survivors can never extend, so skip the (cap, k+1)
+        # gather the caller would discard (counters still see them)
+        cont_rows = paths[:0]
+        n_cont = jnp.int32(0)
+    return emit_rows, cont_rows, n_emit, n_cont, counters
+
+
+def frontier_expand(paths, fwd_begin, fwd_end, fwd_dst, *, depth: int,
+                    t: int, max_deg: int, want_cont: bool = True):
+    """One IDX-DFS hop for a whole chunk, on device (DESIGN.md §9).
+
+    paths is the (rows, k+1) int32 partial-path matrix at ``depth`` (PAD
+    past the depth column); fwd_begin (n,) / fwd_end (n, k+1) / fwd_dst
+    (mf,) are the int32 index arrays (``LightweightIndex.device_arrays``).
+    ``max_deg`` is the chunk's max fan-out (callers read it off the host
+    offset arrays; it must be ≥ 1 — zero-fanout chunks are the host
+    driver's shortcut).
+
+    Returns ``(emit_rows, cont_rows, n_emit, n_cont, counters)`` — all
+    device-resident: the first ``n_emit`` rows of ``emit_rows`` are the
+    completed paths (t written at depth+1) in exact host emission order,
+    the first ``n_cont`` rows of ``cont_rows`` the surviving partials,
+    and ``counters`` the (4,) int32 ``[edges_accessed,
+    partials_generated, invalid_partials, 0]`` Fig.-6 scalars matching
+    the host ``EnumStats`` deltas bit-for-bit.  ``want_cont=False``
+    (the last hop, where survivors cannot extend) skips the continue
+    compaction and returns an empty ``cont_rows`` with ``n_cont == 0``;
+    counters are unaffected.
+
+    Shapes are bucketed to powers of two (rows and fan-out) to bound jit
+    recompiles; padded rows are PAD and inert.  ``REPRO_PALLAS=off``
+    routes the mask stage to the pure-jnp reference.
+    """
+    paths = np.asarray(paths, dtype=np.int32)
+    rows, k1 = paths.shape
+    assert depth + 2 <= k1, f"depth {depth} leaves no column for the hop"
+    assert max_deg >= 1, "zero-fanout chunks never reach the device"
+    C = _next_pow2(max(rows, 8))
+    if C != rows:
+        paths = np.pad(paths, ((0, C - rows), (0, 0)), constant_values=PAD)
+    meta = jnp.asarray([depth, t], jnp.int32)
+    return _frontier_expand_jit(
+        jnp.asarray(paths), jnp.asarray(fwd_begin), jnp.asarray(fwd_end),
+        jnp.asarray(fwd_dst), meta, max_deg=_next_pow2(max_deg),
+        interpret=_interpret(), use_ref=not _enabled(),
+        want_cont=want_cont)
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,47 @@ def counting_spmm_ref(adj_mask: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray
 
 
 # ---------------------------------------------------------------------------
+# IDX-DFS frontier expansion (PathEnum Algorithm 4 hot loop)
+# ---------------------------------------------------------------------------
+
+def frontier_masks_ref(paths, begin, endb, dst, depth, t, max_deg: int,
+                       pad: int = -1):
+    """Pure-jnp oracle for kernels/frontier_expand._frontier_kernel.
+
+    paths (C, k+1) int32 (PAD rows inert); begin/endb (n,) int32 offsets
+    (endb pre-sliced to budget b = k - depth - 1); dst (mf,) int32;
+    depth/t scalar int32.  Returns (vnew, emit, cont, counters) with the
+    same shapes, masking and Fig.-6 counter semantics as the kernel.
+    """
+    C, k1 = paths.shape
+    mf = dst.shape[0]
+    last = jnp.take(paths, depth, axis=1)
+    valid = last != pad
+    lastc = jnp.where(valid, last, 0)
+    bsel = jnp.take(begin, lastc)
+    esel = jnp.take(endb, lastc)
+    cnt = jnp.where(valid, esel - bsel, 0)
+    slot = jnp.arange(max_deg, dtype=jnp.int32)[None, :]
+    in_range = slot < cnt[:, None]
+    pos = jnp.clip(bsel[:, None] + slot, 0, mf - 1)
+    vnew = jnp.take(dst, pos)
+    on_prefix = jnp.arange(k1, dtype=jnp.int32) <= depth        # (k1,)
+    dup = ((paths[:, :, None] == vnew[:, None, :])
+           & on_prefix[None, :, None]).any(axis=1)
+    is_t = vnew == t
+    emit = in_range & ~dup & is_t
+    cont = in_range & ~dup & ~is_t
+    alive = (emit | cont).any(axis=1)
+    dead = valid & ~alive
+    edges = jnp.sum(cnt)
+    invalid = (jnp.sum((dup & in_range).astype(jnp.int32))
+               + jnp.sum(dead.astype(jnp.int32)))
+    counters = jnp.stack([edges, edges, invalid, jnp.int32(0)])
+    return (jnp.where(emit | cont, vnew, pad), emit.astype(jnp.int32),
+            cont.astype(jnp.int32), counters)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (LM prefill / train)
 # ---------------------------------------------------------------------------
 

@@ -135,6 +135,10 @@ class AsyncHcPEServer:
         Hand each group's deadline to the engine as a cooperative stop
         (truncated results, ``exhausted=False``).  Off by default: then
         deadlines order the work and grade SLOs, but never change results.
+    backend:
+        DFS-expansion backend ("host" / "device" / "auto", DESIGN.md §9)
+        for the default-constructed engine; callers handing their own
+        ``engine`` set the knob there instead.
     """
 
     def __init__(self, graph: Union[Graph, GraphRegistry],
@@ -145,9 +149,10 @@ class AsyncHcPEServer:
                  deadline_slack_ms: float = 25.0,
                  default_deadline_ms: Optional[float] = None,
                  enforce_deadlines: bool = False,
-                 report_capacity: int = 256):
+                 report_capacity: int = 256,
+                 backend: str = "host"):
         self.registry = GraphRegistry.wrap(graph)
-        self.engine = engine or BatchPathEnum()
+        self.engine = engine or BatchPathEnum(backend=backend)
         self.registry.bind_engine(self.engine)
         self.batch_window_ms = batch_window_ms
         self.max_queue_depth = max_queue_depth

@@ -22,6 +22,7 @@ import numpy as np
 
 from ..core.batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
                           CacheStats, DEFAULT_GRAPH_ID)
+from ..core.enumerate import EnumStats
 from ..core.graph import Graph
 from .registry import GraphRegistry
 
@@ -96,7 +97,9 @@ class BatchServeReport:
     """Per-batch serving metrics (the paper's Table-3 axes, batch form;
     DESIGN.md §4).  ``cache`` is the batch-level delta; ``tenant_cache``
     splits it by ``graph_id`` so per-tenant reuse (and eviction churn) is
-    observable per serve call (DESIGN.md §8)."""
+    observable per serve call (DESIGN.md §8).  ``enum_stats`` carries the
+    merged Fig.-6 enumeration counters of the batch's distinct results —
+    including ``chunks``, the one field earlier aggregation dropped."""
     batch_size: int
     distinct_queries: int
     total_results: int
@@ -107,8 +110,18 @@ class BatchServeReport:
     p90_ms: float
     p99_ms: float
     cache: CacheStats                 # hits/misses/evictions for this batch
+    enum_stats: EnumStats = dataclasses.field(
+        default_factory=EnumStats)    # merged Fig.-6 enumeration counters
     tenant_cache: Dict[str, CacheStats] = dataclasses.field(
         default_factory=dict)         # the same delta, split per graph_id
+
+    @property
+    def chunks(self) -> int:
+        """Enumeration chunks processed for this batch's distinct results
+        — the work-granularity counter behind the cooperative deadline
+        budget, surfaced from ``enum_stats`` so chunk-level load is
+        observable per serve call."""
+        return self.enum_stats.chunks
 
     @classmethod
     def from_output(cls, out: BatchOutput) -> "BatchServeReport":
@@ -122,7 +135,8 @@ class BatchServeReport:
                    throughput_qps=out.throughput_qps,
                    results_per_second=out.total_results / max(wall, 1e-12),
                    p50_ms=pct["p50_ms"], p90_ms=pct["p90_ms"],
-                   p99_ms=pct["p99_ms"], cache=out.cache_stats)
+                   p99_ms=pct["p99_ms"], cache=out.cache_stats,
+                   enum_stats=out.enum_stats)
 
     @classmethod
     def from_outputs(cls, outputs: List[BatchOutput]) -> "BatchServeReport":
@@ -209,9 +223,13 @@ class HcPEServer:
     """
 
     def __init__(self, graph: Union[Graph, GraphRegistry],
-                 engine: Optional[BatchPathEnum] = None):
+                 engine: Optional[BatchPathEnum] = None,
+                 backend: str = "host"):
         self.registry = GraphRegistry.wrap(graph)
-        self.engine = engine or BatchPathEnum()
+        # `backend` configures the default-constructed engine's DFS
+        # expansion (DESIGN.md §9); callers handing their own engine set
+        # the knob there instead.
+        self.engine = engine or BatchPathEnum(backend=backend)
         self.registry.bind_engine(self.engine)
 
     @property

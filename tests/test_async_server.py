@@ -226,9 +226,12 @@ def test_enforce_deadlines_truncates_with_exhausted_false():
         assert resp.paths.shape[0] == resp.count
 
 
-def test_engine_deadline_noop_when_far_future():
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_engine_deadline_noop_when_far_future(backend):
+    """Deadline semantics are a backend contract (DESIGN.md §9): a far
+    future deadline changes nothing on either expansion engine."""
     g = erdos_renyi(60, 4.0, seed=9)
-    eng = BatchPathEnum()
+    eng = BatchPathEnum(backend=backend)
     queries = [(0, 1, 4), (2, 3, 4)]
     far = eng.run(g, queries, count_only=False,
                   deadline=time.perf_counter() + 3600.0)
@@ -237,10 +240,14 @@ def test_engine_deadline_noop_when_far_future():
     assert all(it.result.exhausted for it in far.items)
 
 
-def test_engine_deadline_already_passed_yields_empty_unexhausted():
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_engine_deadline_already_passed_yields_empty_unexhausted(backend):
+    """…and an already-passed deadline truncates to the empty prefix
+    with ``exhausted=False`` on both backends, before any chunk runs."""
     g = erdos_renyi(60, 4.0, seed=9)
-    out = BatchPathEnum().run(g, [(0, 1, 4)], count_only=False,
-                              deadline=time.perf_counter() - 1.0)
+    out = BatchPathEnum(backend=backend).run(g, [(0, 1, 4)],
+                                             count_only=False,
+                                             deadline=time.perf_counter() - 1.0)
     item = out.items[0]
     assert item.result.count == 0
     assert not item.result.exhausted

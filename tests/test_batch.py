@@ -428,3 +428,66 @@ def test_batch_first_n_respected_under_join_mode():
             want = min(3, int(total))
             assert item.result.count == want, mode
             assert item.result.paths.shape[0] == want, mode
+
+
+# ---------------------------------------------------------------------------
+# enumeration-stats aggregation: EnumStats.merge + chunks in the report
+# ---------------------------------------------------------------------------
+
+def test_enum_stats_merge_roundtrip():
+    """EnumStats.merge is plain field-wise accumulation: merging deltas
+    reproduces the sum, merging a zero stats object is the identity."""
+    from repro.core import EnumStats
+    a = EnumStats(edges_accessed=1, invalid_partials=2, partials_generated=3,
+                  results=4, chunks=5)
+    b = EnumStats(edges_accessed=10, invalid_partials=20,
+                  partials_generated=30, results=40, chunks=50)
+    acc = EnumStats()
+    acc.merge(a)
+    acc.merge(b)
+    assert acc == EnumStats(11, 22, 33, 44, 55)
+    ident = EnumStats(11, 22, 33, 44, 55)
+    ident.merge(EnumStats())
+    assert ident == acc
+
+
+def test_batch_output_enum_stats_counts_distinct_results_once():
+    """BatchOutput.enum_stats merges per-distinct-result stats: in-batch
+    duplicates share one EnumResult and must not double-count."""
+    from repro.core import EnumStats
+    g = erdos_renyi(40, 4.0, seed=2)
+    triples = [(0, 1, 4), (2, 3, 4), (0, 1, 4)]          # one duplicate
+    out = BatchPathEnum().run(g, triples, count_only=False)
+    want = EnumStats()
+    seen = set()
+    for it in out.items:
+        if id(it.result) not in seen:
+            seen.add(id(it.result))
+            want.merge(it.result.stats)
+    assert out.enum_stats == want
+    assert len(seen) == 2
+    assert out.enum_stats.chunks > 0
+    assert out.enum_stats.results == sum(
+        it.result.count for i, it in enumerate(out.items)
+        if not it.deduplicated)
+
+
+def test_batch_serve_report_surfaces_chunks():
+    """Regression: ``chunks`` used to be dropped on the way into
+    BatchServeReport — the report now carries the merged EnumStats and a
+    ``chunks`` accessor, for the sync server path too."""
+    from repro.serving.hcpe import BatchServeReport
+    g = erdos_renyi(40, 4.0, seed=3)
+    out = BatchPathEnum().run(g, [(0, 1, 4), (2, 3, 4)], count_only=False)
+    report = BatchServeReport.from_output(out)
+    assert report.enum_stats == out.enum_stats
+    assert report.chunks == out.enum_stats.chunks > 0
+
+    srv = HcPEServer(g)
+    reqs = [PathQueryRequest(uid=0, s=0, t=1, k=4, count_only=False),
+            PathQueryRequest(uid=1, s=2, t=3, k=4)]      # two serve groups
+    _, srv_report = srv.serve(reqs)
+    per_group = [o.enum_stats.chunks for o in [
+        srv.engine.run(g, [(0, 1, 4)], count_only=False),
+        srv.engine.run(g, [(2, 3, 4)], count_only=True)]]
+    assert srv_report.chunks == sum(per_group) > 0

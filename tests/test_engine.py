@@ -62,10 +62,13 @@ def test_join_equals_dfs_any_cut(gname):
             assert sorted(out.result.as_tuples()) == want, f"cut={cut}"
 
 
-def test_first_n_is_prefix_and_fast_path():
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_first_n_is_prefix_and_fast_path(backend):
+    """first_n's exact-n trim is a backend contract: the device leg
+    (Pallas interpret on CPU, DESIGN.md §9) must trim identically."""
     g = GRAPHS["dag"]
     s, t, k = g.n - 2, g.n - 1, 5
-    eng = PathEnum()
+    eng = PathEnum(backend=backend)
     full = eng.query(g, s, t, k, mode="dfs")
     part = eng.query(g, s, t, k, mode="dfs", first_n=10)
     assert part.result.count == 10
@@ -73,6 +76,9 @@ def test_first_n_is_prefix_and_fast_path():
     assert not part.result.exhausted
     got = set(part.result.as_tuples())
     assert got.issubset(set(full.result.as_tuples()))
+    # the trimmed prefix is the same across backends (same DFS order)
+    host_part = PathEnum().query(g, s, t, k, mode="dfs", first_n=10)
+    assert np.array_equal(part.result.paths, host_part.result.paths)
 
 
 def test_first_n_on_join_path_matches_dfs():

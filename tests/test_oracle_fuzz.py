@@ -3,9 +3,11 @@
 HcPE is *set* enumeration: the one contract every engine path must honor
 is exact path-set equality with the backtracking oracle (Alg. 1).  This
 suite fuzzes that contract over random digraphs of varying size/density —
-through the per-query dfs/join/auto plans, ``BatchPathEnum.run``, and the
-async server — plus the named edge cases (k at the engine's floor, s
-adjacent to t, t unreachable, in-batch duplicates).
+a three-way backend sweep (dfs / join / the Pallas device backend, which
+runs in interpret mode so CPU CI covers it; DESIGN.md §9) through the
+per-query plans, ``BatchPathEnum.run``, and the async server — plus the
+named edge cases (k at the engine's floor, s adjacent to t, t
+unreachable, in-batch duplicates).
 
 Two layers:
   * a deterministic seeded sweep — a fast smoke slice that always runs,
@@ -62,6 +64,12 @@ def _check_engines_match_oracle(seed):
     got_dfs = oracle.paths_as_set(enumerate_paths_idx(idx).as_tuples())
     assert got_dfs == want, f"dfs != oracle [{label}]"
 
+    # device leg of the three-way sweep: same IDX-DFS walk, frontier
+    # expansion on the Pallas kernel (interpret mode on CPU, DESIGN.md §9)
+    got_dev = oracle.paths_as_set(
+        enumerate_paths_idx(idx, backend="device").as_tuples())
+    assert got_dev == want, f"device != oracle [{label}]"
+
     for cut in {1, max(1, k // 2), k - 1}:
         got_join = oracle.paths_as_set(
             enumerate_paths_join(idx, cut=cut).as_tuples())
@@ -72,6 +80,11 @@ def _check_engines_match_oracle(seed):
         out = eng.run(g, [(s, t, k)], count_only=False, mode=mode)
         got = oracle.paths_as_set(out.items[0].result.as_tuples())
         assert got == want, f"batch/{mode} != oracle [{label}]"
+
+    out = BatchPathEnum(backend="device").run(g, [(s, t, k)],
+                                              count_only=False, mode="dfs")
+    got = oracle.paths_as_set(out.items[0].result.as_tuples())
+    assert got == want, f"batch/device != oracle [{label}]"
 
 
 @pytest.mark.parametrize("seed", range(FAST_CASES))
