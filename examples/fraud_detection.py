@@ -1,22 +1,30 @@
-"""Motivation example 2 of the paper: e-commerce fraud cycles.
+"""Motivation example 2 of the paper: e-commerce fraud cycles, ranked.
 
-New edge (v, v') triggers cycle detection = q(v', v, k-1) plus the edge;
-edges carry a transaction-type label and the paths must satisfy an
-attribute predicate (Appendix E, constraints on predicates).
+New edge (v, v') triggers cycle detection = q(v', v, k-1) plus the edge.
+Edges carry transaction amounts; an investigator doesn't want *a* cycle,
+they want the **highest-value** cycles first — so this example uses
+ranked enumeration (``order="weight"``, DESIGN.md §10) instead of an
+Appendix-E threshold constraint: the top-ranked paths under the amount
+weighting come back in deterministic best-first order, and ``first_n``
+returns exactly the top-n without enumerating the rest.
+
+``order="weight"`` ranks cheapest-first, so to surface the *largest*
+cycles we rank by headroom (max_amount - amount per edge): the paths
+whose total headroom is smallest are the ones that moved the most money.
 
     PYTHONPATH=src python examples/fraud_detection.py
 """
 import numpy as np
 
 from repro.core import PathEnum, erdos_renyi
-from repro.core.constraints import AccumulativeValue
 
 rng = np.random.default_rng(3)
 g = erdos_renyi(300, 8.0, seed=3)
 engine = PathEnum()
 
-# transaction amounts as edge weights; flag cycles whose total >= threshold
+# transaction amounts as edge weights; rank cycles by total value
 amounts = rng.uniform(10.0, 5000.0, size=g.m)
+headroom = amounts.max() - amounts          # cheapest headroom = most money
 
 new_edges = []
 for _ in range(200):
@@ -28,17 +36,21 @@ for _ in range(200):
         break
 
 k = 5
+amap = {(int(a), int(b)): float(w)
+        for a, b, w in zip(g.esrc, g.edst, amounts)}
 flagged = 0
 for (v, v2) in new_edges:
-    # cycles through the new edge = paths v2 -> v of length <= k-1
-    cons = AccumulativeValue(weights=amounts, op=np.add, init=0.0,
-                             accept=lambda b: b >= 4000.0)
+    # cycles through the new edge = paths v2 -> v of length <= k-1,
+    # best (highest-value) three first — no threshold to tune
     try:
-        out = engine.query(g, v2, v, k - 1, mode="dfs", constraint=cons)
+        out = engine.query(g, v2, v, k - 1, mode="dfs", order="weight",
+                           weights=headroom, first_n=3)
     except ValueError:
         continue  # v2 == v (self-loop edge)
     if out.result.count:
         flagged += 1
-        print(f"edge ({v}->{v2}): {out.result.count} high-value cycles, "
-              f"e.g. {out.result.as_tuples()[0]}")
+        top = out.result.as_tuples()[0]
+        value = sum(amap[e] for e in zip(top, top[1:]))
+        print(f"edge ({v}->{v2}): top cycle moves {value:,.0f} "
+              f"across {len(top) - 1} hops: {top}")
 print(f"flagged {flagged}/{len(new_edges)} new edges")

@@ -14,7 +14,8 @@ from .batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
                     CacheStats, DEFAULT_GRAPH_ID, IndexCache,
                     batched_index_distances, edge_mask_hash, tenant_of)
 from .baseline import generic_dfs
-from . import oracle, constraints, relations
+from .rank import RankSpec, make_rank_spec
+from . import oracle, constraints, rank, relations
 
 __all__ = [
     "Graph", "from_edges", "erdos_renyi", "power_law", "layered_dag", "grid",
@@ -26,4 +27,5 @@ __all__ = [
     "BatchPathEnum", "BatchOutput", "BatchItem", "BatchTiming", "CacheStats",
     "IndexCache", "batched_index_distances", "edge_mask_hash",
     "DEFAULT_GRAPH_ID", "tenant_of", "DeviceIndexArrays", "resolve_backend",
+    "RankSpec", "make_rank_spec", "rank",
 ]

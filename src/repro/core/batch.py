@@ -494,27 +494,39 @@ class BatchPathEnum:
 
     # -- enumeration --------------------------------------------------------
     def _enumerate(self, idx: LightweightIndex, plan: Plan, count_only: bool,
-                   first_n: Optional[int],
-                   deadline: Optional[float]) -> EnumResult:
+                   first_n: Optional[int], deadline: Optional[float],
+                   order: Optional[str] = None,
+                   weights: Optional[np.ndarray] = None) -> EnumResult:
         if plan.method == "dfs":
             return enumerate_paths_idx(idx, chunk_size=self.engine.chunk_size,
                                        count_only=count_only, first_n=first_n,
                                        deadline=deadline,
-                                       backend=self.engine.backend)
+                                       backend=self.engine.backend,
+                                       order=order, weights=weights)
         return enumerate_paths_join(idx, cut=plan.cut, count_only=count_only,
                                     first_n=first_n,
                                     max_partials=self.engine.max_partials,
-                                    deadline=deadline)
+                                    deadline=deadline,
+                                    order=order, weights=weights)
 
     def run(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
             count_only: bool = True, first_n: Optional[int] = None,
             mode: str = "auto", edge_mask: Optional[np.ndarray] = None,
             deadline: Optional[float] = None,
             graph_id: str = DEFAULT_GRAPH_ID,
+            order: Optional[str] = None,
+            weights: Optional[np.ndarray] = None,
             _precomputed_distances: Optional[Dict[QueryKey, Tuple[np.ndarray,
                                                                   np.ndarray]]] = None,
             ) -> BatchOutput:
         """Serve a batch; returns per-query items in input order.
+
+        ``order`` requests ranked (any-k) enumeration for the whole batch
+        (DESIGN.md §10): each query's paths come back in non-decreasing
+        hop/weight rank with the lexicographic tie-break, ``first_n``
+        means the per-query top-n, and a ``deadline`` truncation is a
+        rank-optimal prefix per query.  ``weights`` (graph edge order,
+        non-negative) feeds ``order="weight"``.
 
         ``graph_id`` names the tenant ``graph`` belongs to (DESIGN.md §8):
         it prefixes every cache key this run touches, so two tenants'
@@ -576,7 +588,8 @@ class BatchPathEnum:
                 raise ValueError(f"unknown mode {mode!r}")
             timing.optimize_seconds += plan.optimize_seconds
             t1 = time.perf_counter()
-            res = self._enumerate(idx, plan, count_only, first_n, deadline)
+            res = self._enumerate(idx, plan, count_only, first_n, deadline,
+                                  order=order, weights=weights)
             timing.enumerate_seconds += time.perf_counter() - t1
             item = BatchItem(s=key[1], t=key[2], k=key[3], result=res,
                              plan=plan, index_cached=was_cached,

@@ -23,16 +23,31 @@ fixed-width PAD-padded chunks, with the Fig.-6 counters coming back as
 device scalars.  ``auto`` picks the device for small k and dense
 frontiers and falls back to the host otherwise (`resolve_backend`).
 Results, stats and chunk boundaries are bit-identical across backends.
+
+Ranked (any-k) enumeration (DESIGN.md §10): ``order="hops"|"weight"``
+replaces the LIFO chunk walk with a priority-ordered frontier.  The host
+runs a best-first heap over partial-path lower bounds (`_drive_ranked_heap`
+— bound = accumulated cost + the index's distance-to-t array, or its
+min-plus weighted analogue from rank.py); the device path runs
+rank-bucketed chunk scheduling (`_drive_ranked_buckets`) that drains one
+integer hop-bound bucket at a time through the *unchanged* Pallas kernel.
+Both emit paths in non-decreasing ``(cost, lexicographic sequence)``
+order, so ``first_n`` returns the top-n and a deadline truncation is a
+rank-optimal prefix.  With ``order=None``, exhausted results are
+canonicalized to the same key, so every backend/plan returns the same
+ordered list on a full enumeration.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import os
 import time
 from typing import Callable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from . import rank
 from .graph import PAD
 from .index import LightweightIndex
 
@@ -47,11 +62,13 @@ DEVICE_AUTO_MIN_EDGES = 2048
 
 
 def resolve_backend(idx: LightweightIndex, backend: Optional[str],
-                    constraint=None) -> str:
+                    constraint=None, order: Optional[str] = None) -> str:
     """Resolve a requested backend to the one that will run (DESIGN.md §9
     fallback matrix).  Constraints are host-only state machines, so any
-    constrained query runs on the host; ``auto`` additionally requires
-    small k, a dense-enough index, and a real accelerator (or
+    constrained query runs on the host; ``order="weight"`` likewise runs
+    on the host (float rank buckets don't exist — the device scheduler
+    drains integer hop buckets, DESIGN.md §10); ``auto`` additionally
+    requires small k, a dense-enough index, and a real accelerator (or
     ``REPRO_DEVICE_ENUM=force``, which lets CPU CI cover the device leg
     in interpret mode)."""
     if backend is not None and backend not in ("host", "device", "auto"):
@@ -59,6 +76,8 @@ def resolve_backend(idx: LightweightIndex, backend: Optional[str],
     if backend is None or backend == "host":
         return "host"
     if constraint is not None:
+        return "host"
+    if order == "weight":
         return "host"
     if backend == "device":
         return "device"
@@ -155,6 +174,8 @@ def enumerate_paths_idx(
     constraint=None,
     deadline: Optional[float] = None,
     backend: Optional[str] = None,
+    order: Optional[str] = None,
+    weights: Optional[np.ndarray] = None,
 ) -> EnumResult:
     """Enumerate P(s,t,k,G) from the light-weight index (Algorithm 4).
 
@@ -175,15 +196,38 @@ def enumerate_paths_idx(
     backends plug an expansion step into the one driver loop below, so
     paths, counts, ``EnumStats`` and chunk boundaries are identical by
     construction — only the expansion engine changes.
+
+    ``order`` switches to ranked (any-k) enumeration (DESIGN.md §10):
+    paths come back in non-decreasing rank — hop count or edge-weight
+    sum (``weights``, graph edge order) — with lexicographic vertex
+    sequences breaking ties, identically across backends.  ``first_n``
+    then means the top-n and a deadline truncation is a rank-optimal
+    prefix.  Ranked enumeration and ``constraint`` are mutually
+    exclusive (the heap frontier carries rank state where the chunk
+    walk carries constraint state).
     """
-    if resolve_backend(idx, backend, constraint) == "device":
-        step = _device_step(idx)          # resolve guarantees no constraint
-        constraint = None
-    else:
-        step = _host_step(idx, constraint)
-    return _drive(idx, step, chunk_size=chunk_size, count_only=count_only,
-                  first_n=first_n, max_results=max_results,
-                  constraint=constraint, deadline=deadline)
+    spec = rank.make_rank_spec(order, weights)
+    if spec is not None and constraint is not None:
+        raise ValueError("order= cannot be combined with constraint= "
+                         "(constrained ranked enumeration is not "
+                         "supported; post-filter instead)")
+    resolved = resolve_backend(idx, backend, constraint, order=order)
+    if spec is None:
+        step = _device_step(idx) if resolved == "device" \
+            else _host_step(idx, constraint)
+        return _drive(idx, step, chunk_size=chunk_size,
+                      count_only=count_only, first_n=first_n,
+                      max_results=max_results, constraint=constraint,
+                      deadline=deadline)
+    if resolved == "device":
+        return _drive_ranked_buckets(idx, _device_step(idx),
+                                     chunk_size=chunk_size,
+                                     count_only=count_only, first_n=first_n,
+                                     max_results=max_results,
+                                     deadline=deadline)
+    return _drive_ranked_heap(idx, spec, chunk_size=chunk_size,
+                              count_only=count_only, first_n=first_n,
+                              max_results=max_results, deadline=deadline)
 
 
 def _drive(idx: LightweightIndex, step, chunk_size: int, count_only: bool,
@@ -247,7 +291,8 @@ def _drive(idx: LightweightIndex, step, chunk_size: int, count_only: bool,
                     if constraint is not None else None
                 work.append((cont_rows[sl], depth + 1, piece_cs))
 
-    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True,
+                     canonical=True)
 
 
 def _host_step(idx: LightweightIndex, constraint):
@@ -377,11 +422,211 @@ def _device_step(idx: LightweightIndex):
     return step
 
 
+def _drive_ranked_heap(idx: LightweightIndex, spec: "rank.RankSpec",
+                       chunk_size: int, count_only: bool,
+                       first_n: Optional[int], max_results: Optional[int],
+                       deadline: Optional[float]) -> EnumResult:
+    """Best-first host driver for ranked enumeration (DESIGN.md §10).
+
+    Two heaps over the canonical ``(cost, sequence)`` key:
+
+      * *partials*, keyed by an admissible lower bound — accumulated
+        cost so far plus ``rank.remaining_lower_bound`` at the frontier
+        vertex (depth + dist_t for hops; the min-plus analogue for
+        weights);
+      * *results*, keyed by exact canonical cost.
+
+    The emission gate: pop the minimum result only once it provably
+    precedes every completion of every live partial — for hops an exact
+    tuple compare against the minimum partial (the lexicographic
+    extension property makes the tie case safe: a partial whose key ties
+    the result extends to sequences that still compare after it), for
+    weights a strict clearance of ``min bound − slack`` (see
+    ``rank.WEIGHT_TIE_SLACK``; true ties then meet in the results heap,
+    where canonical costs are bit-identical, and break exactly on the
+    sequence).  Otherwise a batch of equal-depth partials is popped from
+    the heap top and expanded through the same `_expand_chunk` hop the
+    unranked driver uses — speculative expansion is always safe because
+    emission order is decided solely by the gate.
+
+    Anytime contracts: ``first_n`` stops after the n-th emission (the
+    top-n); a deadline returns only the gated emissions — pending
+    results cannot be flushed, an undiscovered path could still precede
+    them — so the prefix is rank-optimal by construction.
+    """
+    k, s = idx.k, idx.s
+    stats = EnumStats()
+    out_paths: List[np.ndarray] = []
+    out_lens: List[np.ndarray] = []
+    count = 0
+    lb = rank.remaining_lower_bound(idx, spec)
+    zero = 0.0 if spec.is_weight else 0
+
+    root = np.full(k + 1, PAD, dtype=np.int32)
+    root[0] = s
+    tick = 0  # heap tiebreak so comparison never reaches the ndarray
+    # entry: (bound-or-cost, sequence tuple, tick, depth, row, acc)
+    partials = [(zero + lb[s], (int(s),), tick, 0, root, zero)]
+    results: List[Tuple] = []
+
+    def gated(res_key, part_key):
+        if spec.is_weight:
+            return res_key[0] < part_key[0] - rank.weight_slack(part_key[0])
+        return res_key[:2] < part_key[:2]
+
+    while partials or results:
+        if deadline is not None and time.perf_counter() >= deadline:
+            return _finalize(idx, out_paths, out_lens, count, stats,
+                             exhausted=False)
+        if results and (not partials or gated(results[0], partials[0])):
+            cost, _seq, _tick, depth, row, _acc = heapq.heappop(results)
+            if first_n is not None and count >= first_n:
+                return _finalize(idx, out_paths, out_lens, count, stats,
+                                 exhausted=False)
+            count += 1
+            stats.results += 1
+            if not count_only:
+                out_paths.append(row[None, :])
+                out_lens.append(np.full(1, depth, np.int32))
+            if max_results is not None and count > max_results:
+                raise EngineLimit(f"more than {max_results} results")
+            if first_n is not None and count >= first_n:
+                return _finalize(idx, out_paths, out_lens, count, stats,
+                                 exhausted=False)
+            continue
+
+        batch = [heapq.heappop(partials)]
+        depth = batch[0][3]
+        while partials and len(batch) < chunk_size \
+                and partials[0][3] == depth:
+            batch.append(heapq.heappop(partials))
+        rows = np.stack([e[4] for e in batch])
+        accs = np.asarray([e[5] for e in batch])
+        stats.chunks += 1
+        expanded = _expand_chunk(idx, rows, depth, stats)
+        if expanded is None:
+            continue
+        parent, pos, vnew, emit, cont = expanded
+        acc_new = accs[parent] + rank.edge_step_costs(idx, spec, pos)
+
+        for i in np.nonzero(emit)[0]:
+            p = int(parent[i])
+            row = rows[p].copy()
+            row[depth + 1] = vnew[i]
+            tick += 1
+            heapq.heappush(results, (acc_new[i],
+                                     batch[p][1] + (int(vnew[i]),),
+                                     tick, depth + 1, row, acc_new[i]))
+        if depth + 1 < k:
+            for i in np.nonzero(cont)[0]:
+                p = int(parent[i])
+                row = rows[p].copy()
+                row[depth + 1] = vnew[i]
+                tick += 1
+                heapq.heappush(partials,
+                               (acc_new[i] + lb[vnew[i]],
+                                batch[p][1] + (int(vnew[i]),),
+                                tick, depth + 1, row, acc_new[i]))
+
+    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+
+
+def _drive_ranked_buckets(idx: LightweightIndex, step, chunk_size: int,
+                          count_only: bool, first_n: Optional[int],
+                          max_results: Optional[int],
+                          deadline: Optional[float]) -> EnumResult:
+    """Rank-bucketed device driver for ``order="hops"`` (DESIGN.md §10).
+
+    Hop bounds are integers, so the best-first frontier collapses into
+    buckets: every partial row with lower bound ``b = depth + dist_t
+    [last]`` lives in bucket ``b``.  Buckets drain in ascending order
+    through the *unchanged* Pallas expansion step — a child either
+    emits (cost exactly ``b``: an edge into t pins the parent's dist_t
+    at 1) or re-buckets at ``depth+1 + dist_t[child] ≥ b`` (triangle
+    inequality of BFS levels), so once bucket ``b`` is empty, its
+    collected emissions are the complete cost-``b`` stratum.  One lex
+    sort per stratum then yields the canonical ``(cost, sequence)``
+    order, bit-identical to the host heap.
+
+    Anytime contracts: ``first_n`` trims inside a sorted stratum; a
+    deadline keeps only completed strata (the in-progress bucket's
+    emissions are discarded — its stratum is incomplete, so any prefix
+    through it could misorder) — again a rank-optimal prefix.
+    """
+    k, s = idx.k, idx.s
+    stats = EnumStats()
+    out_paths: List[np.ndarray] = []
+    out_lens: List[np.ndarray] = []
+    count = 0
+    dist_t = idx.dist_t.astype(np.int64)
+
+    root = np.full((1, k + 1), PAD, dtype=np.int32)
+    root[0, 0] = s
+    bucket_keys = [int(dist_t[s])]
+    buckets = {int(dist_t[s]): [(root, 0)]}
+
+    while bucket_keys:
+        b = heapq.heappop(bucket_keys)
+        pend = buckets.pop(b)
+        stratum: List[np.ndarray] = []
+        while pend:
+            if deadline is not None and time.perf_counter() >= deadline:
+                return _finalize(idx, out_paths, out_lens, count, stats,
+                                 exhausted=False)
+            rows, depth = pend.pop()
+            stats.chunks += 1
+            expanded = step(rows, depth, None, stats, depth + 1 < k)
+            if expanded is None:
+                continue
+            emit_rows, cont_rows, _ = expanded
+            if emit_rows is not None and emit_rows.shape[0]:
+                stratum.append(emit_rows)
+            if cont_rows is not None and cont_rows.shape[0] \
+                    and depth + 1 < k:
+                nb = depth + 1 + dist_t[cont_rows[:, depth + 1]]
+                for val in np.unique(nb):
+                    sel = cont_rows[nb == val]
+                    if int(val) == b:
+                        dest = pend
+                    else:
+                        dest = buckets.setdefault(int(val), [])
+                        if len(dest) == 0:
+                            heapq.heappush(bucket_keys, int(val))
+                    for st in range(0, sel.shape[0], chunk_size):
+                        dest.append((sel[st:st + chunk_size], depth + 1))
+        if not stratum:
+            continue
+        allr = np.concatenate(stratum, axis=0)
+        allr = allr[np.lexsort(tuple(allr[:, j] for j in range(k, -1, -1)))]
+        nres = allr.shape[0]
+        count += nres
+        stats.results += nres
+        if not count_only:
+            out_paths.append(allr)
+            out_lens.append(np.full(nres, b, np.int32))
+        if max_results is not None and count > max_results:
+            raise EngineLimit(f"more than {max_results} results")
+        if first_n is not None and count >= first_n:
+            count = _trim_to_first_n(out_paths, out_lens, count, first_n,
+                                     count_only, stats)
+            return _finalize(idx, out_paths, out_lens, count, stats,
+                             exhausted=False)
+
+    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+
+
 def _trim_to_first_n(out_paths, out_lens, count, first_n, count_only,
                      stats) -> int:
     """Drop the over-emitted tail of the last chunk so exactly ``first_n``
     results come back — the first-n counts then agree between the DFS and
-    join paths regardless of either path's emission granularity."""
+    join paths regardless of either path's emission granularity.
+
+    Which n rows survive is contract-dependent: under ``order`` the
+    emitters feed this trim in canonical rank order, so the survivors
+    are exactly the top-n; with ``order=None`` a truncated (non-
+    exhausted) prefix stays *plan-defined* — DFS emission order for the
+    dfs plans, key-group order for join — and only exhausted results are
+    canonicalized (`_finalize(canonical=True)`)."""
     excess = count - first_n
     if excess > 0:
         stats.results -= excess
@@ -392,11 +637,22 @@ def _trim_to_first_n(out_paths, out_lens, count, first_n, count_only,
     return count
 
 
-def _finalize(idx, out_paths, out_lens, count, stats, exhausted) -> EnumResult:
+def _finalize(idx, out_paths, out_lens, count, stats, exhausted,
+              canonical: bool = False) -> EnumResult:
+    """Concatenate emitted blocks into an EnumResult.  ``canonical``
+    applies the hops-canonical ``(length, sequence)`` sort — requested
+    only for *exhausted* unranked results, so every backend and plan
+    returns the same ordered list on a full enumeration (ranked drivers
+    already emit in their own canonical order, and truncated unranked
+    prefixes stay plan-defined, see `_trim_to_first_n`)."""
     k = idx.k
     if out_paths:
         paths = np.concatenate(out_paths, axis=0)
         lens = np.concatenate(out_lens, axis=0)
+        if canonical and paths.shape[0] > 1:
+            perm = rank.canonical_perm(paths, lens.astype(np.int64))
+            paths = paths[perm]
+            lens = lens[perm]
     else:
         paths = np.zeros((0, k + 1), dtype=np.int32)
         lens = np.zeros((0,), dtype=np.int32)

@@ -12,6 +12,15 @@ evaluation — exactly the trick that lets the paper avoid k separate joins.
 The within-half simple-path check runs during expansion; the cross-half
 check runs at join time (the paper: "we check whether a result is a valid
 path when performing the join operation").
+
+Ranked mode (DESIGN.md §10): ``order=`` keeps the same halves and the
+same per-group join, but schedules cut-key groups by a lower bound on
+their cheapest joinable result (min half cost on each side), processes
+them in ascending bound order, and gates emission on the next group's
+bound — results strictly below it can no longer be preceded, so anytime
+truncations (deadline, early ``first_n``) return rank-optimal prefixes
+and the full run returns the exact canonical ``(cost, sequence)`` order
+that the DFS backends produce.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from . import rank
 from .enumerate import (EngineLimit, EnumResult, EnumStats, _finalize,
                         _trim_to_first_n)
 from .graph import PAD
@@ -63,10 +73,10 @@ def _expand_to_width(idx: LightweightIndex, start_vertices: np.ndarray,
         parent = np.repeat(np.arange(rows.shape[0], dtype=np.int64), cnt)
         offs = np.zeros(rows.shape[0], dtype=np.int64)
         np.cumsum(cnt[:-1], out=offs[1:])
-        rank = np.arange(total, dtype=np.int64) - offs[parent]
+        slot = np.arange(total, dtype=np.int64) - offs[parent]
         vnew = np.where(
             finished[parent], t,
-            idx.fwd_dst[np.minimum(begin[parent] + rank,
+            idx.fwd_dst[np.minimum(begin[parent] + slot,
                                    idx.fwd_dst.shape[0] - 1)]
             if idx.fwd_dst.size else t).astype(np.int32)
         new_rows = rows[parent].copy()
@@ -91,6 +101,8 @@ def enumerate_paths_join(
     max_results: Optional[int] = None,
     constraint=None,
     deadline: Optional[float] = None,
+    order: Optional[str] = None,
+    weights: Optional[np.ndarray] = None,
 ) -> EnumResult:
     """Algorithm 6 with cut position ``cut`` (i*).
 
@@ -103,10 +115,25 @@ def enumerate_paths_join(
     time analogue, checked at the join's natural chunk boundaries: before
     each half expansion and between cut-key groups.  Past it, the paths
     joined so far return with ``exhausted=False``.
+
+    ``order`` switches to ranked enumeration (DESIGN.md §10): key groups
+    are scheduled by cost lower bound and results come back in the same
+    canonical ``(cost, sequence)`` order as the DFS backends; anytime
+    truncations are then rank-optimal prefixes.  Mutually exclusive with
+    ``constraint``, mirroring enumerate_paths_idx.
     """
     k, s, t = idx.k, idx.s, idx.t
     if not 0 < cut < k:
         raise ValueError(f"cut must be in (0, k), got {cut}")
+    spec = rank.make_rank_spec(order, weights)
+    if spec is not None and constraint is not None:
+        raise ValueError("order= cannot be combined with constraint= "
+                         "(constrained ranked enumeration is not "
+                         "supported; post-filter instead)")
+    if spec is not None:
+        return _join_ranked(idx, cut, spec, count_only=count_only,
+                            first_n=first_n, max_partials=max_partials,
+                            max_results=max_results, deadline=deadline)
     stats = JoinStats()
 
     def _expired() -> bool:
@@ -194,4 +221,173 @@ def enumerate_paths_join(
                 return _finalize(idx, out_paths, out_lens, count, stats,
                                  exhausted=False)
 
-    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True)
+    return _finalize(idx, out_paths, out_lens, count, stats, exhausted=True,
+                     canonical=True)
+
+
+# ---------------------------------------------------------------------------
+# ranked join (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _half_costs(idx: LightweightIndex, rows: np.ndarray,
+                spec: "rank.RankSpec") -> np.ndarray:
+    """Per-row cost of a (possibly t-padded) join half: edges up to the
+    first t occurrence (or the full width when t is absent), hop-counted
+    or weight-accumulated left to right like every other backend."""
+    t = idx.t
+    is_t = rows == t
+    has = is_t.any(axis=1)
+    hops = np.where(has, np.argmax(is_t, axis=1),
+                    rows.shape[1] - 1).astype(np.int64)
+    if not spec.is_weight:
+        return hops
+    keys, vals = rank.index_edge_table(idx, spec.weights)
+    n = np.int64(idx.n)
+    costs = np.zeros(rows.shape[0], dtype=np.float64)
+    for j in range(rows.shape[1] - 1):
+        act = hops > j
+        if not act.any():
+            break
+        q = rows[act, j].astype(np.int64) * n + rows[act, j + 1]
+        costs[act] = costs[act] + vals[np.searchsorted(keys, q)]
+    return costs
+
+
+def _join_ranked(idx: LightweightIndex, cut: int, spec: "rank.RankSpec",
+                 count_only: bool, first_n: Optional[int],
+                 max_partials: Optional[int], max_results: Optional[int],
+                 deadline: Optional[float]) -> EnumResult:
+    """Ranked Algorithm 6: identical halves and per-group join, ordered
+    group scheduling (DESIGN.md §10).
+
+    Each realized cut key gets a lower bound ``lb = min cost_a(key) +
+    min cost_b(key)`` on its cheapest joinable result; groups run in
+    ascending ``(lb, key)`` order.  After any group, every accumulated
+    result whose canonical cost lies strictly below the *next* group's
+    bound (minus ``rank.weight_slack`` for floats) can no longer be
+    preceded, so deadline expiry and early ``first_n`` emit exactly
+    those, canonically sorted — a rank-optimal prefix.  A full run sorts
+    everything, matching the DFS backends bit-for-bit.
+    """
+    k, s, t = idx.k, idx.s, idx.t
+    stats = JoinStats()
+
+    def _expired() -> bool:
+        return deadline is not None and time.perf_counter() >= deadline
+
+    if _expired():
+        return _finalize(idx, [], [], 0, stats, exhausted=False)
+
+    ra = _expand_to_width(idx, np.array([s], np.int32), 0, cut + 1, stats,
+                          max_partials)
+    stats.ra_size = ra.shape[0]
+    if ra.shape[0] == 0:
+        return _finalize(idx, [], [], 0, stats, exhausted=True)
+    if _expired():
+        return _finalize(idx, [], [], 0, stats, exhausted=False)
+
+    keys = np.unique(ra[:, cut])
+    rb = _expand_to_width(idx, keys.astype(np.int32), cut, k - cut + 1, stats,
+                          max_partials)
+    stats.rb_size = rb.shape[0]
+    if rb.shape[0] == 0:
+        return _finalize(idx, [], [], 0, stats, exhausted=True)
+
+    order_a = np.argsort(ra[:, cut], kind="stable")
+    order_b = np.argsort(rb[:, 0], kind="stable")
+    ra_s, rb_s = ra[order_a], rb[order_b]
+    ka, kb = ra_s[:, cut], rb_s[:, 0]
+    a_start = np.searchsorted(ka, keys, side="left")
+    a_end = np.searchsorted(ka, keys, side="right")
+    b_start = np.searchsorted(kb, keys, side="left")
+    b_end = np.searchsorted(kb, keys, side="right")
+
+    cost_a = _half_costs(idx, ra_s, spec)
+    cost_b = _half_costs(idx, rb_s, spec)
+    lb = np.full(keys.shape[0], np.inf, dtype=np.float64)
+    for ki in range(keys.shape[0]):
+        if b_end[ki] > b_start[ki]:
+            lb[ki] = cost_a[a_start[ki]:a_end[ki]].min() \
+                + cost_b[b_start[ki]:b_end[ki]].min()
+    group_order = np.lexsort((keys, lb))
+
+    acc_rows: List[np.ndarray] = []
+    acc_lens: List[np.ndarray] = []
+    acc_costs: List[np.ndarray] = []
+    total = 0
+
+    def _emit(threshold: float, exhausted: bool) -> EnumResult:
+        """Emit the accumulated results safely below ``threshold`` (the
+        min bound of unprocessed groups; inf once none remain), sorted
+        into canonical order and first_n-trimmed."""
+        if total == 0:
+            return _finalize(idx, [], [], 0, stats, exhausted=exhausted)
+        costs = np.concatenate(acc_costs)
+        if np.isfinite(threshold):
+            eff = threshold - rank.weight_slack(threshold) \
+                if spec.is_weight else threshold
+            safe = costs < eff
+        else:
+            safe = np.ones(costs.shape[0], dtype=bool)
+        n_emit = int(safe.sum())
+        if first_n is not None:
+            n_emit = min(n_emit, first_n)
+        stats.results = n_emit
+        if count_only:
+            return _finalize(idx, [], [], n_emit, stats,
+                             exhausted=exhausted)
+        rows = np.concatenate(acc_rows, axis=0)[safe]
+        lens = np.concatenate(acc_lens)[safe]
+        perm = rank.canonical_perm(rows, costs[safe])
+        rows, lens = rows[perm][:n_emit], lens[perm][:n_emit]
+        return _finalize(idx, [rows], [lens], n_emit, stats,
+                         exhausted=exhausted)
+
+    A_BLOCK = 256
+    for j in range(group_order.shape[0]):
+        ki = group_order[j]
+        if not np.isfinite(lb[ki]):
+            break                       # dead groups sort last
+        if _expired():
+            return _emit(float(lb[ki]), exhausted=False)
+        na, nb = a_end[ki] - a_start[ki], b_end[ki] - b_start[ki]
+        stats.pairs += int(na * nb)
+        A = ra_s[a_start[ki]:a_end[ki]]
+        B = rb_s[b_start[ki]:b_end[ki]]
+        bi = B[:, 1:]
+        bmask = bi != t
+        for a0 in range(0, na, A_BLOCK):
+            ai = A[a0:a0 + A_BLOCK, :cut]
+            clash = ((ai[:, None, :, None] == bi[None, :, None, :])
+                     & (ai != t)[:, None, :, None]
+                     & bmask[None, :, None, :]).any(axis=(2, 3))
+            ia, ib = np.nonzero(~clash)
+            if ia.size == 0:
+                continue
+            tuples = np.concatenate([ai[ia], B[ib]], axis=1)
+            is_t = tuples == t
+            lens = np.argmax(is_t, axis=1).astype(np.int32)
+            rows = tuples.copy()
+            col = np.arange(k + 1)[None, :]
+            rows[col > lens[:, None]] = PAD
+            total += rows.shape[0]
+            if max_results is not None and total > max_results:
+                raise EngineLimit(f"more than {max_results} results")
+            acc_rows.append(rows)
+            acc_lens.append(lens)
+            acc_costs.append(np.asarray(
+                rank.path_costs(idx, rows, lens, spec), dtype=np.float64))
+        nxt = float(lb[group_order[j + 1]]) \
+            if j + 1 < group_order.shape[0] else np.inf
+        # max(first_n, 1): first_n=0 still needs one result to exist
+        # before the cut counts as truncation (matching the DFS drivers,
+        # where an empty exhaustive run reports exhausted=True)
+        if first_n is not None and total >= max(first_n, 1) \
+                and np.isfinite(nxt):
+            costs = np.concatenate(acc_costs)
+            eff = nxt - rank.weight_slack(nxt) if spec.is_weight else nxt
+            if int((costs < eff).sum()) >= first_n:
+                return _emit(nxt, exhausted=False)
+
+    exhausted = not (first_n is not None and total >= max(first_n, 1))
+    return _emit(np.inf, exhausted=exhausted)

@@ -4,6 +4,14 @@ Pure Python + numpy, deliberately simple.  Every engine path (IDX-DFS
 frontier enumerator, IDX-JOIN, constrained variants) is validated against
 this oracle as an exact *set* comparison — HcPE is set enumeration, emit
 order is not part of the contract.
+
+Under ``order=`` (ranked / any-k mode, DESIGN.md §10) the contract
+tightens to the exact *sequence*: the oracle sorts by ``(cost,
+lexicographic vertex sequence)`` where cost is the hop count or the
+left-to-right edge-weight sum — python floats accumulated in the same
+order as the engines' float64, so ties and near-ties agree bit-for-bit
+— and the rank-order fuzz layer asserts ordered-list equality against
+every backend.
 """
 from __future__ import annotations
 
@@ -44,10 +52,45 @@ def bfs_dist_np(graph: Graph, src: int, k: int, reverse: bool = False,
     return dist
 
 
+def path_cost(p: Tuple[int, ...], order: str,
+              wmap: Optional[dict] = None) -> float:
+    """Canonical rank cost of one path tuple: hop count, or the
+    left-to-right edge-weight sum (``wmap``: (u, v) -> weight), summed
+    in the engines' canonical accumulation order."""
+    if order == "hops":
+        return len(p) - 1
+    cost = 0.0
+    for a, b in zip(p, p[1:]):
+        cost = cost + float(wmap[(a, b)])
+    return cost
+
+
+def rank_sorted(paths: Iterable[Tuple[int, ...]], order: Optional[str],
+                weights=None, graph: Optional[Graph] = None,
+                ) -> List[Tuple[int, ...]]:
+    """Sort path tuples into the canonical ranked order (DESIGN.md §10):
+    ``(cost, vertex sequence)`` — the exact sequence every backend must
+    emit under ``order=``.  ``order=None`` uses the hops key (the
+    canonicalization applied to exhausted unranked results)."""
+    wmap = None
+    if order == "weight":
+        if graph is None or weights is None:
+            raise ValueError("order='weight' needs graph and weights")
+        wmap = {(int(a), int(b)): float(w)
+                for a, b, w in zip(graph.esrc, graph.edst, weights)}
+    key_order = order or "hops"
+    return sorted(paths, key=lambda p: (path_cost(p, key_order, wmap), p))
+
+
 def enumerate_paths(graph: Graph, s: int, t: int, k: int,
                     edge_pred: Optional[Callable[[int, int], bool]] = None,
-                    ) -> List[Tuple[int, ...]]:
-    """All simple paths s->t with ≤ k edges (interior vertices ∉ {s,t})."""
+                    order: Optional[str] = None,
+                    weights=None) -> List[Tuple[int, ...]]:
+    """All simple paths s->t with ≤ k edges (interior vertices ∉ {s,t}).
+
+    Sorted plainly (tuple order) by default; ``order=`` returns the
+    canonical ranked sequence instead (see `rank_sorted`).
+    """
     if s == t:
         raise ValueError("s and t must be distinct")
     # B(v): distance to t (for the standard hop-feasibility pruning of Alg. 1;
@@ -80,6 +123,8 @@ def enumerate_paths(graph: Graph, s: int, t: int, k: int,
                 on_path.discard(v2)
 
     search()
+    if order is not None:
+        return rank_sorted(out, order, weights=weights, graph=graph)
     return sorted(out)
 
 

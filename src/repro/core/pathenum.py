@@ -71,7 +71,20 @@ class PathEnum:
               mode: str = "auto", count_only: bool = False,
               first_n: Optional[int] = None, constraint=None,
               edge_mask=None, cut: Optional[int] = None,
-              backend: Optional[str] = None) -> QueryOutput:
+              backend: Optional[str] = None,
+              order: Optional[str] = None,
+              weights: Optional[np.ndarray] = None,
+              deadline: Optional[float] = None) -> QueryOutput:
+        """Run q(s,t,k) and return paths, plan, index and timings.
+
+        ``order`` requests ranked (any-k) enumeration (DESIGN.md §10):
+        ``"hops"`` ranks by hop count, ``"weight"`` by edge-weight sum
+        (``weights``: one non-negative float per graph edge), both with
+        the lexicographic vertex sequence as tie-break, so every
+        mode/backend returns the identical ordered list.  Under ranked
+        order, ``first_n`` means the top-n and a ``deadline`` (absolute
+        ``time.perf_counter()``) truncation is a rank-optimal prefix.
+        """
         if k < 2:
             raise ValueError("paper assumes k >= 2")
         timing = QueryTiming()
@@ -99,13 +112,17 @@ class PathEnum:
             res = enumerate_paths_idx(idx, chunk_size=self.chunk_size,
                                       count_only=count_only, first_n=first_n,
                                       constraint=constraint,
-                                      backend=backend or self.backend)
+                                      backend=backend or self.backend,
+                                      order=order, weights=weights,
+                                      deadline=deadline)
         else:
             res = enumerate_paths_join(idx, cut=plan.cut,
                                        count_only=count_only,
                                        first_n=first_n,
                                        max_partials=self.max_partials,
-                                       constraint=constraint)
+                                       constraint=constraint,
+                                       order=order, weights=weights,
+                                       deadline=deadline)
         timing.enumerate_seconds = time.perf_counter() - t0
         return QueryOutput(result=res, plan=plan, index=idx, timing=timing)
 

@@ -1,0 +1,198 @@
+"""Ranked (any-k) enumeration support (DESIGN.md §10).
+
+PathEnum's anytime contracts (``first_n``, deadlines) historically
+returned an *arbitrary* prefix of P(s,t,k,G).  Ranked enumeration — the
+any-k contract of Tziavelis et al. (arXiv:1911.05582) — upgrades that to
+the *best* prefix: paths come back in non-decreasing rank, so a
+truncation is always the top of the result set.  This module is the
+shared vocabulary of that contract; the drivers live in enumerate.py
+(best-first host heap, rank-bucketed device scheduling) and join.py
+(cost-ordered key groups).
+
+Rank of a path ``p``:
+
+  * ``order="hops"``   — the hop count (number of edges).
+  * ``order="weight"`` — the edge-weight sum, accumulated left-to-right
+    in float64 (the *canonical accumulation order*: every engine path
+    and the oracle sum in the same order, so ties and near-ties agree
+    bit-for-bit across backends).
+
+Ties break on the **lexicographic vertex sequence** (PAD-padded rows
+compare exactly like Python tuples: a shorter sequence sorts before its
+extensions).  The combined key ``(cost, sequence)`` is a total order, so
+every backend — dfs host, dfs device, join — emits the *same* ordered
+sequence of paths, not merely the same set.
+
+``order="weight"`` demands non-negative finite weights (aligned with the
+graph's edge order, like ``constraints.AccumulativeValue``): the
+best-first lower bounds are only admissible for monotone non-negative
+accumulation, the same Appendix-E caveat the constraint machinery
+honors.  Parallel edges are out of scope (``from_edges`` dedups them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+ORDERS = ("hops", "weight")
+
+# Relative slack treating two float path costs as a potential tie
+# (DESIGN.md §10).  Canonical left-to-right accumulation makes equal
+# *paths* cost bit-identical everywhere, but a *lower bound* (acc +
+# wdist_t, or a join group's min_a + min_b) sums in a different
+# association order, so it may sit a few ulps off the cost it bounds.
+# Emission gates therefore require a result to clear the bound by this
+# margin; costs within it are resolved exactly by waiting for the
+# bounded partials to finish.  The margin only delays emission — it
+# never reorders it.
+WEIGHT_TIE_SLACK = 1e-9
+
+
+def weight_slack(bound: float) -> float:
+    """The absolute emission margin at a given bound magnitude."""
+    return WEIGHT_TIE_SLACK * (1.0 + abs(float(bound)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSpec:
+    """A validated ranking request: ``order`` plus (for weight ranking)
+    the float64 edge-weight array in graph edge order."""
+    order: str
+    weights: Optional[np.ndarray] = None
+
+    @property
+    def is_weight(self) -> bool:
+        """True for ``order="weight"`` (float costs, slack-gated
+        emission); False for hop ranking (exact integer costs)."""
+        return self.order == "weight"
+
+
+def make_rank_spec(order: Optional[str],
+                   weights: Optional[np.ndarray]) -> Optional[RankSpec]:
+    """Validate an ``order=`` request into a RankSpec (None stays None).
+
+    ``order="weight"`` requires ``weights``: one finite non-negative
+    value per graph edge (graph edge order, like
+    ``constraints.AccumulativeValue``).  Negative or non-finite weights
+    are rejected — the best-first lower bounds would stop being
+    admissible and the ranked contract would silently break.
+    """
+    if order is None:
+        return None
+    if order not in ORDERS:
+        raise ValueError(f"unknown order {order!r}; expected one of "
+                         f"{ORDERS} or None")
+    if order == "hops":
+        return RankSpec(order="hops")
+    if weights is None:
+        raise ValueError("order='weight' requires an edge-weight array "
+                         "(graph edge order)")
+    w = np.asarray(weights, dtype=np.float64)
+    if w.ndim != 1:
+        raise ValueError(f"weights must be 1-D, got shape {w.shape}")
+    if not np.all(np.isfinite(w)):
+        raise ValueError("order='weight' requires finite weights")
+    if w.size and float(w.min()) < 0.0:
+        raise ValueError("order='weight' requires non-negative weights "
+                         "(the Appendix-E monotonicity caveat)")
+    return RankSpec(order="weight", weights=w)
+
+
+# ---------------------------------------------------------------------------
+# canonical ordering
+# ---------------------------------------------------------------------------
+
+def canonical_perm(paths: np.ndarray, costs: np.ndarray) -> np.ndarray:
+    """The permutation sorting ``paths`` rows by ``(cost, sequence)``.
+
+    Stable lexsort: primary key ``costs``, then vertex columns left to
+    right.  PAD (−1) tail padding sorts before any vertex id, so a
+    shorter sequence precedes its extensions — exactly Python tuple
+    comparison on the unpadded sequences.
+    """
+    cols = tuple(paths[:, j] for j in range(paths.shape[1] - 1, -1, -1))
+    return np.lexsort(cols + (costs,))
+
+
+def index_edge_table(idx, values: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """A vectorized (u, v) -> value lookup table over *index* edges.
+
+    Returns ``(keys, vals)`` with ``keys = u * n + v`` sorted ascending
+    and ``vals`` the per-edge values (``values`` in graph edge order,
+    mapped through ``idx.fwd_eid``).  Every edge an enumerator walks is
+    an index edge by construction, so ``np.searchsorted(keys, u*n+v)``
+    always hits.
+    """
+    n = np.int64(idx.n)
+    counts = (idx.fwd_end[:, idx.k] - idx.fwd_begin).astype(np.int64)
+    eu = np.repeat(np.arange(idx.n, dtype=np.int64), counts)
+    keys = eu * n + idx.fwd_dst.astype(np.int64)
+    vals = np.asarray(values, dtype=np.float64)[idx.fwd_eid]
+    order = np.argsort(keys, kind="stable")
+    return keys[order], vals[order]
+
+
+def path_costs(idx, paths: np.ndarray, lengths: np.ndarray,
+               spec: Optional[RankSpec]) -> np.ndarray:
+    """Canonical per-row costs for finished path rows.
+
+    Hop ranking (and the ``order=None`` canonicalization) costs a row
+    its length; weight ranking re-accumulates each row's edge weights
+    left to right in float64 — the one accumulation order every backend
+    and the oracle share, so identical paths cost bit-identical floats.
+    """
+    if spec is None or not spec.is_weight:
+        return np.asarray(lengths, dtype=np.int64)
+    keys, vals = index_edge_table(idx, spec.weights)
+    n = np.int64(idx.n)
+    costs = np.zeros(paths.shape[0], dtype=np.float64)
+    for j in range(paths.shape[1] - 1):
+        act = np.asarray(lengths) > j
+        if not act.any():
+            break
+        q = paths[act, j].astype(np.int64) * n + paths[act, j + 1]
+        costs[act] = costs[act] + vals[np.searchsorted(keys, q)]
+    return costs
+
+
+def remaining_lower_bound(idx, spec: RankSpec) -> np.ndarray:
+    """Admissible per-vertex lower bound on the cost still needed to
+    reach ``t`` (the best-first heuristic of DESIGN.md §10).
+
+    * hops: the index's exact BFS distance-to-t array.
+    * weight: a k-round min-plus relaxation over the index edges —
+      ``wd[v] = min(w(v,u) + wd[u])`` — so ``wd[v]`` is the cheapest
+      ≤k-hop walk cost v→t.  Simple paths are a subset of walks and
+      weights are non-negative, so the bound is admissible (never above
+      the true remaining cost).  Unreachable vertices carry +inf.
+    """
+    if not spec.is_weight:
+        return idx.dist_t.astype(np.int64)
+    counts = (idx.fwd_end[:, idx.k] - idx.fwd_begin).astype(np.int64)
+    eu = np.repeat(np.arange(idx.n, dtype=np.int64), counts)
+    ew = np.asarray(spec.weights, dtype=np.float64)[idx.fwd_eid]
+    dst = idx.fwd_dst.astype(np.int64)
+    wd = np.full(idx.n, np.inf, dtype=np.float64)
+    wd[idx.t] = 0.0
+    for _ in range(idx.k):
+        if eu.size == 0:
+            break
+        cand = ew + wd[dst]
+        new = wd.copy()
+        np.minimum.at(new, eu, cand)
+        if np.array_equal(new, wd):
+            break
+        wd = new
+    return wd
+
+
+def edge_step_costs(idx, spec: RankSpec, pos: np.ndarray) -> np.ndarray:
+    """Per-candidate incremental cost for index positions ``pos`` (the
+    frontier expansion's gather offsets): 1 for hops, the edge weight
+    for weight ranking."""
+    if not spec.is_weight:
+        return np.ones(pos.shape[0], dtype=np.int64)
+    return np.asarray(spec.weights, dtype=np.float64)[idx.fwd_eid[pos]]

@@ -165,6 +165,12 @@ def frontier_expand(paths, fwd_begin, fwd_end, fwd_dst, *, depth: int,
     Shapes are bucketed to powers of two (rows and fan-out) to bound jit
     recompiles; padded rows are PAD and inert.  ``REPRO_PALLAS=off``
     routes the mask stage to the pure-jnp reference.
+
+    Ranked enumeration (DESIGN.md §10) reuses this kernel *unchanged*:
+    the rank-bucketed driver (core/enumerate._drive_ranked_buckets)
+    decides which chunks to expand and in what order — one hop-bound
+    bucket at a time — but each launch is the same hop this docstring
+    describes.  Rank awareness lives entirely in host scheduling.
     """
     paths = np.asarray(paths, dtype=np.int32)
     rows, k1 = paths.shape

@@ -9,7 +9,7 @@ from .async_server import AsyncHcPEServer, AsyncServeStats
 from .hcpe import (BatchServeReport, HcPEServer, PathQueryRequest,
                    PathQueryResponse, STATUS_OK, STATUS_REJECTED_QUEUE_FULL,
                    STATUS_REJECTED_QUOTA, STATUS_REJECTED_SHUTDOWN,
-                   STATUS_REJECTED_TENANT_QUOTA,
+                   STATUS_REJECTED_NO_WEIGHTS, STATUS_REJECTED_TENANT_QUOTA,
                    STATUS_REJECTED_UNKNOWN_GRAPH)
 from .registry import GraphRegistry, TenantEntry
 
@@ -18,4 +18,4 @@ __all__ = ["engine", "HcPEServer", "PathQueryRequest", "PathQueryResponse",
            "GraphRegistry", "TenantEntry",
            "STATUS_OK", "STATUS_REJECTED_QUEUE_FULL", "STATUS_REJECTED_QUOTA",
            "STATUS_REJECTED_TENANT_QUOTA", "STATUS_REJECTED_UNKNOWN_GRAPH",
-           "STATUS_REJECTED_SHUTDOWN"]
+           "STATUS_REJECTED_SHUTDOWN", "STATUS_REJECTED_NO_WEIGHTS"]

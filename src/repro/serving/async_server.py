@@ -35,6 +35,13 @@ contract of ``first_n`` (ranked-enumeration style, arXiv:1911.05582),
 keyed on time.  Left off (the default), deadlines shape *scheduling
 order and reporting only* and results stay byte-identical to the sync
 engine.
+
+Requests carrying ``order=`` run ranked (DESIGN.md §10), which upgrades
+those enforced-deadline truncations from "some paths" to "the best
+paths seen so far": the engine emits in non-decreasing rank, so the
+truncated prefix is rank-optimal.  ``order="weight"`` requires the
+tenant's registry entry to carry ``edge_weights``; submissions against
+weightless tenants resolve to ``STATUS_REJECTED_NO_WEIGHTS``.
 """
 from __future__ import annotations
 
@@ -50,9 +57,11 @@ from typing import Union
 
 from ..core.batch import BatchOutput, BatchPathEnum, DEFAULT_GRAPH_ID
 from ..core.graph import Graph
+from ..core.rank import ORDERS
 from .hcpe import (BatchServeReport, PathQueryRequest, PathQueryResponse,
-                   STATUS_REJECTED_QUEUE_FULL, STATUS_REJECTED_QUOTA,
-                   STATUS_REJECTED_SHUTDOWN, STATUS_REJECTED_TENANT_QUOTA,
+                   STATUS_REJECTED_NO_WEIGHTS, STATUS_REJECTED_QUEUE_FULL,
+                   STATUS_REJECTED_QUOTA, STATUS_REJECTED_SHUTDOWN,
+                   STATUS_REJECTED_TENANT_QUOTA,
                    STATUS_REJECTED_UNKNOWN_GRAPH, rejection_response,
                    request_group_key, response_from_item)
 from .registry import GraphRegistry
@@ -70,6 +79,7 @@ class AsyncServeStats:
     rejected_tenant_quota: int = 0
     rejected_unknown_graph: int = 0
     rejected_shutdown: int = 0
+    rejected_no_weights: int = 0
     micro_batches: int = 0
     slo_met: int = 0
     slo_missed: int = 0
@@ -104,8 +114,8 @@ class AsyncHcPEServer:
     engine — and therefore the tenant-keyed index LRU — is shared across
     all micro-batches and tenants, exactly as it is across
     ``HcPEServer.serve`` calls.  Micro-batches group by
-    ``(graph_id, count_only, first_n)``: one engine batch never mixes
-    tenants.
+    ``(graph_id, count_only, first_n, order)``: one engine batch never
+    mixes tenants or ranking modes.
 
     Parameters
     ----------
@@ -243,6 +253,9 @@ class AsyncHcPEServer:
             raise ValueError("paper assumes k >= 2")
         if req.s == req.t:
             raise ValueError("s and t must be distinct")
+        if req.order is not None and req.order not in ORDERS:
+            raise ValueError(f"unknown order {req.order!r}; expected one "
+                             f"of {ORDERS} or None")
         if req.graph_id not in self.registry:
             # admission, not validation: tenants register/retire at
             # runtime, so an unknown graph is load-shed state the client
@@ -257,6 +270,13 @@ class AsyncHcPEServer:
         if not (0 <= req.s < graph.n and 0 <= req.t < graph.n):
             raise ValueError(f"s/t out of range for graph "
                              f"{req.graph_id!r} with n={graph.n}")
+        if req.order == "weight" and \
+                self.registry.entry(req.graph_id).edge_weights is None:
+            # admission, not validation: weights are tenant configuration
+            # (registered at runtime), so their absence is in-band state
+            self.stats.submitted += 1
+            self.stats.rejected_no_weights += 1
+            return self._rejected(req, STATUS_REJECTED_NO_WEIGHTS)
         self.stats.submitted += 1
         if self._closing:
             self.stats.rejected_shutdown += 1
@@ -361,7 +381,7 @@ class AsyncHcPEServer:
         group resolves to ``STATUS_REJECTED_UNKNOWN_GRAPH`` responses."""
         self.stats.micro_batches += 1
         head = group[0].req
-        count_only, first_n = head.count_only, head.first_n
+        count_only, first_n, order = head.count_only, head.first_n, head.order
         if head.graph_id not in self.registry:
             for p in group:
                 if not p.future.done():
@@ -371,6 +391,19 @@ class AsyncHcPEServer:
                 self._settle(p)
             return
         graph = self.registry.get(head.graph_id)
+        weights = None
+        if order == "weight":
+            weights = self.registry.entry(head.graph_id).edge_weights
+            if weights is None:
+                # tenant re-registered without weights between admission
+                # and dispatch: fail soft, like a retired tenant
+                for p in group:
+                    if not p.future.done():
+                        self.stats.rejected_no_weights += 1
+                        p.future.set_result(self._rejected(
+                            p.req, STATUS_REJECTED_NO_WEIGHTS))
+                    self._settle(p)
+                return
         deadline = None
         if self.enforce_deadlines:
             deadlines = [p.deadline_at for p in group]
@@ -383,7 +416,7 @@ class AsyncHcPEServer:
             out = await asyncio.to_thread(
                 self.engine.run, graph, queries, count_only=count_only,
                 first_n=first_n, deadline=deadline,
-                graph_id=head.graph_id)
+                graph_id=head.graph_id, order=order, weights=weights)
         except BaseException as exc:  # engine bug: fail the group, not the loop
             for p in group:
                 if not p.future.done():

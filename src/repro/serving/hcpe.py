@@ -36,6 +36,7 @@ STATUS_REJECTED_QUOTA = "rejected_quota"
 STATUS_REJECTED_TENANT_QUOTA = "rejected_tenant_quota"
 STATUS_REJECTED_UNKNOWN_GRAPH = "rejected_unknown_graph"
 STATUS_REJECTED_SHUTDOWN = "rejected_shutdown"
+STATUS_REJECTED_NO_WEIGHTS = "rejected_no_weights"
 
 
 @dataclasses.dataclass
@@ -52,6 +53,14 @@ class PathQueryRequest:
     for earliest-deadline-first scheduling and the ``slo_met`` flag, and —
     when deadline enforcement is on — as the cooperative enumeration
     budget of its micro-batch.
+
+    ``order`` requests ranked (any-k) enumeration (DESIGN.md §10):
+    ``"hops"`` needs nothing extra; ``"weight"`` ranks by the tenant's
+    registered ``edge_weights`` — tenants without weights reject such
+    requests with ``STATUS_REJECTED_NO_WEIGHTS``.  Under ``order``,
+    ``first_n`` means the top-n and every deadline truncation is a
+    rank-optimal prefix, which is what turns the async server's EDF
+    truncations from "some paths" into "the best paths seen so far".
     """
     uid: int
     s: int
@@ -61,6 +70,7 @@ class PathQueryRequest:
     first_n: Optional[int] = None     # response-time mode: first-n results
     deadline_ms: Optional[float] = None
     graph_id: str = DEFAULT_GRAPH_ID  # tenant graph (DESIGN.md §8)
+    order: Optional[str] = None       # ranked mode (DESIGN.md §10)
 
 
 @dataclasses.dataclass
@@ -158,16 +168,18 @@ class BatchServeReport:
 # below and the async front-end (async_server.py)
 # ---------------------------------------------------------------------------
 
-GroupKey = Tuple[str, bool, Optional[int]]  # (graph_id, count_only, first_n)
+# (graph_id, count_only, first_n, order)
+GroupKey = Tuple[str, bool, Optional[int], Optional[str]]
 
 
 def request_group_key(req: PathQueryRequest) -> GroupKey:
     """The engine-batch compatibility key: requests sharing it can be
     served by one ``BatchPathEnum.run`` call (the engine takes the graph,
-    count_only and first_n per batch, not per query — so the tenant
-    dimension groups first, DESIGN.md §8).  Both front-ends derive their
-    grouping from this one function — extend it here, never inline."""
-    return (req.graph_id, req.count_only, req.first_n)
+    count_only, first_n and order per batch, not per query — so the
+    tenant dimension groups first, DESIGN.md §8).  Both front-ends derive
+    their grouping from this one function — extend it here, never
+    inline."""
+    return (req.graph_id, req.count_only, req.first_n, req.order)
 
 
 def group_requests(requests: Sequence[PathQueryRequest],
@@ -248,17 +260,26 @@ class HcPEServer:
         responses: List[Optional[PathQueryResponse]] = [None] * len(requests)
         outputs: List[BatchOutput] = []
         for key, positions in group_requests(requests).items():
-            graph_id, count_only, first_n = key
+            graph_id, count_only, first_n, order = key
             if graph_id not in self.registry:
                 for p in positions:
                     responses[p] = rejection_response(
                         requests[p], STATUS_REJECTED_UNKNOWN_GRAPH)
                 continue
+            weights = None
+            if order == "weight":
+                weights = self.registry.entry(graph_id).edge_weights
+                if weights is None:
+                    for p in positions:
+                        responses[p] = rejection_response(
+                            requests[p], STATUS_REJECTED_NO_WEIGHTS)
+                    continue
             queries = [(requests[p].s, requests[p].t, requests[p].k)
                        for p in positions]
             out = self.engine.run(self.registry.get(graph_id), queries,
                                   count_only=count_only, first_n=first_n,
-                                  graph_id=graph_id)
+                                  graph_id=graph_id, order=order,
+                                  weights=weights)
             outputs.append(out)
             for p, item in zip(positions, out.items):
                 resp = response_from_item(requests[p], item)

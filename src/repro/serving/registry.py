@@ -30,6 +30,8 @@ import dataclasses
 import weakref
 from typing import Dict, Optional, Tuple, Union
 
+import numpy as np
+
 from ..core.batch import BatchPathEnum, DEFAULT_GRAPH_ID
 from ..core.graph import Graph
 
@@ -39,11 +41,15 @@ class TenantEntry:
     """One registered tenant: its graph plus per-tenant serving knobs
     (DESIGN.md §8).  ``cache_quota`` bounds the tenant's index-cache
     entries; ``max_pending`` bounds its admitted-but-unanswered requests
-    in the async front-end (None = the server's default applies)."""
+    in the async front-end (None = the server's default applies).
+    ``edge_weights`` (graph edge order, non-negative) makes the tenant
+    servable under ``order="weight"`` ranked queries (DESIGN.md §10);
+    tenants without weights reject those requests at admission."""
     graph_id: str
     graph: Graph
     cache_quota: Optional[int] = None
     max_pending: Optional[int] = None
+    edge_weights: Optional[np.ndarray] = None
 
 
 class GraphRegistry:
@@ -78,17 +84,27 @@ class GraphRegistry:
 
     def register(self, graph_id: str, graph: Graph, *,
                  cache_quota: Optional[int] = None,
-                 max_pending: Optional[int] = None) -> TenantEntry:
+                 max_pending: Optional[int] = None,
+                 edge_weights: Optional[np.ndarray] = None) -> TenantEntry:
         """Add (or replace) one tenant; quotas propagate to every bound
         engine's cache immediately.  Replacing a tenant's graph drops its
         old cache entries first — indexes built against the old graph must
-        not answer queries against the new one."""
+        not answer queries against the new one.  ``edge_weights`` (one
+        non-negative float per graph edge) enables ``order="weight"``
+        ranked serving for the tenant (DESIGN.md §10)."""
         if not graph_id:
             raise ValueError("graph_id must be a non-empty string")
+        if edge_weights is not None:
+            edge_weights = np.asarray(edge_weights, dtype=np.float64)
+            if edge_weights.shape != (graph.m,):
+                raise ValueError(
+                    f"edge_weights must have shape ({graph.m},), got "
+                    f"{edge_weights.shape}")
         if graph_id in self._entries:
             self._drop_from_engines(graph_id)
         entry = TenantEntry(graph_id=graph_id, graph=graph,
-                            cache_quota=cache_quota, max_pending=max_pending)
+                            cache_quota=cache_quota, max_pending=max_pending,
+                            edge_weights=edge_weights)
         self._entries[graph_id] = entry
         for engine in self._engines:
             engine.cache.set_quota(graph_id, cache_quota)

@@ -86,6 +86,82 @@ def test_action_sequence_dfa(seed):
     assert sorted(got_j.result.as_tuples()) == sorted(want)
 
 
+@pytest.mark.parametrize("mode,cut", [("dfs", None), ("join", 2)])
+def test_accumulative_zero_weight_edges(mode, cut):
+    """Zero-weight edges: accumulation must be a no-op on them — a
+    threshold predicate over a mostly-zero weight vector keeps exactly
+    the paths whose few weighted edges clear it."""
+    rng = np.random.default_rng(9)
+    g = erdos_renyi(36, 4.0, seed=90)
+    weights = np.where(rng.random(g.m) < 0.7, 0.0,
+                       rng.uniform(1.0, 3.0, size=g.m))
+    wmap = edge_weight_map(g, weights)
+    s, t, k = 0, g.n - 1, 5
+    want = [p for p in oracle.enumerate_paths(g, s, t, k)
+            if sum(wmap[(a, b)] for a, b in zip(p, p[1:])) >= 2.0]
+    cons = AccumulativeValue(weights=weights, op=np.add, init=0.0,
+                             accept=lambda b: b >= 2.0)
+    got = PathEnum().query(g, s, t, k, mode=mode, cut=cut, constraint=cons)
+    assert sorted(got.result.as_tuples()) == sorted(want)
+
+
+@pytest.mark.parametrize("mode,cut", [("dfs", None), ("join", 2)])
+def test_accumulative_float_tie_at_threshold(mode, cut):
+    """Exact float ties on the accept boundary: integer-valued float
+    weights make path sums land exactly ON the threshold, and >= must
+    keep them — both in the engine's vectorized accumulation and the
+    python-sum post-filter, which agree bit-for-bit on these values."""
+    rng = np.random.default_rng(10)
+    g = erdos_renyi(36, 4.0, seed=91)
+    weights = rng.integers(0, 3, size=g.m).astype(np.float64)
+    wmap = edge_weight_map(g, weights)
+    s, t, k = 0, g.n - 1, 5
+    thresh = 4.0   # hit exactly by many 4-edge paths of small-int weights
+    all_paths = oracle.enumerate_paths(g, s, t, k)
+    sums = {p: sum(wmap[(a, b)] for a, b in zip(p, p[1:]))
+            for p in all_paths}
+    assert any(v == thresh for v in sums.values())   # ties actually occur
+    want = [p for p in all_paths if sums[p] >= thresh]
+    cons = AccumulativeValue(weights=weights, op=np.add, init=0.0,
+                             accept=lambda b: b >= thresh)
+    got = PathEnum().query(g, s, t, k, mode=mode, cut=cut, constraint=cons)
+    assert sorted(got.result.as_tuples()) == sorted(want)
+
+
+def test_accumulative_init_and_op_overrides():
+    """Non-default ``init``/``op``: max-accumulation (bottleneck width)
+    seeded from -inf, and multiplicative accumulation seeded from 1.0,
+    both against the oracle post-filter."""
+    rng = np.random.default_rng(11)
+    g = erdos_renyi(32, 4.0, seed=92)
+    s, t, k = 0, g.n - 1, 5
+    all_paths = oracle.enumerate_paths(g, s, t, k)
+
+    widths = rng.uniform(0.5, 4.0, size=g.m)
+    wmap = edge_weight_map(g, widths)
+    want_max = [p for p in all_paths
+                if max(wmap[(a, b)] for a, b in zip(p, p[1:])) >= 3.0]
+    cons_max = AccumulativeValue(weights=widths, op=np.maximum,
+                                 init=-np.inf, accept=lambda b: b >= 3.0)
+    got = PathEnum().query(g, s, t, k, mode="dfs", constraint=cons_max)
+    assert sorted(got.result.as_tuples()) == sorted(want_max)
+
+    # multiplicative: probabilities along the path, keep the likely ones
+    probs = rng.uniform(0.5, 1.0, size=g.m)
+    pmap = edge_weight_map(g, probs)
+    want_mul = []
+    for p in all_paths:
+        prod = 1.0
+        for a, b in zip(p, p[1:]):
+            prod = prod * pmap[(a, b)]
+        if prod >= 0.25:
+            want_mul.append(p)
+    cons_mul = AccumulativeValue(weights=probs, op=np.multiply, init=1.0,
+                                 accept=lambda b: b >= 0.25)
+    got = PathEnum().query(g, s, t, k, mode="dfs", constraint=cons_mul)
+    assert sorted(got.result.as_tuples()) == sorted(want_mul)
+
+
 def test_edge_predicate_matches_subgraph_oracle():
     g = erdos_renyi(40, 4.0, seed=77)
     pred = lambda u, v: (u + v) % 3 != 0

@@ -279,6 +279,72 @@ def test_t_unreachable_yields_empty_everywhere(seed):
 
 
 # ---------------------------------------------------------------------------
+# ranked (any-k) layer: ordered-SEQUENCE equality vs the rank-order oracle
+# ---------------------------------------------------------------------------
+#
+# Set equality is not enough under ``order=``: the contract is the exact
+# emission sequence — non-decreasing rank, lexicographic vertex tie-break
+# — identical bit-for-bit across dfs / join / device (DESIGN.md §10).
+
+RANKED_FAST_CASES = 12
+RANKED_SWEEP_CASES = 200
+
+
+def _random_weights(g, seed):
+    """Duplicate-heavy non-negative weights: small integers (zeros
+    included) so many distinct paths share an exact cost — the case that
+    puts the lexicographic tie-break on the hook."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 4, size=g.m).astype(np.float64)
+
+
+def _check_ranked_match_oracle(seed):
+    g, s, t, k = _random_case(seed)
+    w = _random_weights(g, seed + 500_000)
+    for order in ("hops", "weight"):
+        weights = w if order == "weight" else None
+        want = oracle.enumerate_paths(g, s, t, k, order=order,
+                                      weights=weights)
+        label = f"seed={seed} order={order} n={g.n} m={g.m} q=({s},{t},{k})"
+
+        idx = build_index(g, s, t, k)
+        got = enumerate_paths_idx(idx, order=order, weights=weights)
+        assert got.as_tuples() == want, f"dfs != oracle [{label}]"
+        assert got.exhausted
+
+        # device leg: order="hops" runs the rank-bucketed Pallas driver;
+        # order="weight" exercises the documented host fallback
+        got_dev = enumerate_paths_idx(idx, backend="device", order=order,
+                                      weights=weights)
+        assert got_dev.as_tuples() == want, f"device != oracle [{label}]"
+
+        for cut in {1, max(1, k // 2), k - 1}:
+            got_join = enumerate_paths_join(idx, cut=cut, order=order,
+                                            weights=weights)
+            assert got_join.as_tuples() == want, \
+                f"join(cut={cut}) != oracle [{label}]"
+
+        for mode in ("auto", "dfs", "join"):
+            out = BatchPathEnum().run(g, [(s, t, k)], count_only=False,
+                                      mode=mode, order=order,
+                                      weights=weights)
+            assert out.items[0].result.as_tuples() == want, \
+                f"batch/{mode} != oracle [{label}]"
+
+
+@pytest.mark.parametrize("seed", range(RANKED_FAST_CASES))
+def test_ranked_engines_match_oracle_smoke(seed):
+    _check_ranked_match_oracle(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(RANKED_FAST_CASES,
+                                       RANKED_FAST_CASES + RANKED_SWEEP_CASES))
+def test_ranked_engines_match_oracle_sweep(seed):
+    _check_ranked_match_oracle(seed)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis layer (property-based shrinkable counterexamples)
 # ---------------------------------------------------------------------------
 
@@ -307,3 +373,34 @@ if HAVE_HYPOTHESIS:
         for mode in ("auto", "dfs", "join"):
             out = eng.run(g, [(s, t, k)], count_only=False, mode=mode)
             assert oracle.paths_as_set(out.items[0].result.as_tuples()) == want
+
+    @st.composite
+    def ranked_query(draw):
+        """graph_query plus an order and (for weight) a tie-heavy weight
+        vector drawn from a 4-value pool — shrinking drives toward all-
+        equal weights, the hardest tie-break case."""
+        g, s, t, k = draw(graph_query())
+        order = draw(st.sampled_from(["hops", "weight"]))
+        weights = None
+        if order == "weight":
+            weights = np.array(draw(st.lists(
+                st.sampled_from([0.0, 0.5, 1.0, 2.0]),
+                min_size=g.m, max_size=g.m)), dtype=np.float64)
+        return g, s, t, k, order, weights
+
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(ranked_query())
+    def test_hypothesis_ranked_sequence_equality(rq):
+        g, s, t, k, order, weights = rq
+        want = oracle.enumerate_paths(g, s, t, k, order=order,
+                                      weights=weights)
+        idx = build_index(g, s, t, k)
+        assert enumerate_paths_idx(
+            idx, order=order, weights=weights).as_tuples() == want
+        assert enumerate_paths_idx(
+            idx, backend="device", order=order,
+            weights=weights).as_tuples() == want
+        assert enumerate_paths_join(
+            idx, cut=max(1, k // 2), order=order,
+            weights=weights).as_tuples() == want

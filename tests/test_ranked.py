@@ -1,0 +1,368 @@
+"""Ranked (any-k) enumeration contracts (DESIGN.md §10).
+
+The oracle-fuzz suite (test_oracle_fuzz.py) pins the full ordered
+sequence to the rank-order oracle; this file pins everything else the
+``order=`` contract promises:
+
+  * **anytime prefix-optimality** — any truncation (``first_n`` or a
+    deadline) of a ranked run is exactly a prefix of the full ranked
+    sequence, on every backend, under both orders (seeded sweep + a
+    hypothesis layer);
+  * **unranked canonicalization** — ``order=None`` exhausted results are
+    the same (length, lex) canonical sequence on every backend, so plan
+    choice never leaks into result order (the PR-6 regression fix);
+  * **validation** — ``make_rank_spec`` input checking, the
+    order × constraint exclusion, registry ``edge_weights`` checking;
+  * **serving** — order threading through both front-ends, the
+    ``STATUS_REJECTED_NO_WEIGHTS`` admission path, and async EDF
+    truncations returning rank-optimal prefixes.
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEnum, PathEnum, build_index,
+                        enumerate_paths_idx, enumerate_paths_join,
+                        erdos_renyi, from_edges, make_rank_spec, oracle)
+from repro.core.constraints import AccumulativeValue
+from repro.core.graph import PAD
+from repro.serving import (AsyncHcPEServer, GraphRegistry, HcPEServer,
+                           PathQueryRequest, STATUS_OK,
+                           STATUS_REJECTED_NO_WEIGHTS)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ORDERS = ("hops", "weight")
+
+
+def _case(seed):
+    """One random digraph + query with tie-heavy integer weights."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 26))
+    m = max(1, int(n * float(rng.choice([1.0, 2.0, 3.5]))))
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    s, t = map(int, rng.choice(n, 2, replace=False))
+    k = int(rng.integers(3, 7))
+    w = rng.integers(0, 4, size=g.m).astype(np.float64)
+    return g, s, t, k, w
+
+
+def _runners(idx, k):
+    """Every ranked backend as (label, fn(order, weights, **kw))."""
+    return [
+        ("dfs", lambda **kw: enumerate_paths_idx(idx, **kw)),
+        ("device", lambda **kw: enumerate_paths_idx(idx, backend="device",
+                                                    **kw)),
+        ("join", lambda **kw: enumerate_paths_join(idx, cut=max(1, k // 2),
+                                                   **kw)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# input validation
+# ---------------------------------------------------------------------------
+
+def test_make_rank_spec_validation():
+    assert make_rank_spec(None, None) is None
+    assert make_rank_spec("hops", None).order == "hops"
+    spec = make_rank_spec("weight", np.ones(3))
+    assert spec.is_weight and spec.weights.dtype == np.float64
+    with pytest.raises(ValueError):
+        make_rank_spec("cheapest", None)          # unknown order string
+    with pytest.raises(ValueError):
+        make_rank_spec("weight", None)            # weight order needs weights
+    with pytest.raises(ValueError):
+        make_rank_spec("weight", np.array([1.0, -0.5]))   # negative
+    with pytest.raises(ValueError):
+        make_rank_spec("weight", np.array([1.0, np.nan]))  # non-finite
+    with pytest.raises(ValueError):
+        make_rank_spec("weight", np.ones((2, 2)))          # not 1-D
+
+
+def test_order_and_constraint_are_mutually_exclusive():
+    g, s, t, k, w = _case(0)
+    idx = build_index(g, s, t, k)
+    cons = AccumulativeValue(weights=w, op=np.add, init=0.0,
+                             accept=lambda b: True)
+    with pytest.raises(ValueError, match="constraint"):
+        enumerate_paths_idx(idx, order="hops", constraint=cons)
+    with pytest.raises(ValueError, match="constraint"):
+        enumerate_paths_join(idx, cut=1, order="weight", weights=w,
+                             constraint=cons)
+
+
+def test_registry_edge_weights_shape_validation():
+    g = erdos_renyi(12, 2.0, seed=1)
+    reg = GraphRegistry()
+    with pytest.raises(ValueError, match="edge_weights"):
+        reg.register("g", g, edge_weights=np.ones(g.m + 1))
+    entry = reg.register("g", g, edge_weights=np.ones(g.m, dtype=np.float32))
+    assert entry.edge_weights.dtype == np.float64    # canonical accumulation
+
+
+# ---------------------------------------------------------------------------
+# anytime prefix-optimality: first_n is the top-n, on every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("order", ORDERS)
+def test_first_n_is_rank_optimal_prefix(seed, order):
+    g, s, t, k, w = _case(100 + seed)
+    weights = w if order == "weight" else None
+    idx = build_index(g, s, t, k)
+    for label, run in _runners(idx, k):
+        full = run(order=order, weights=weights)
+        assert full.exhausted
+        total = full.count
+        seq = full.as_tuples()
+        for n in {0, 1, 2, max(0, total - 1), total, total + 5}:
+            got = run(order=order, weights=weights, first_n=n)
+            assert got.as_tuples() == seq[:n], (label, n, seed)
+            # exhausted=False iff the cut actually bit: n results were
+            # reached (first_n=0 on an empty run still exhausts)
+            assert got.exhausted == (max(n, 1) > total), (label, n, seed)
+
+
+@pytest.mark.parametrize("order", ORDERS)
+def test_batch_first_n_is_rank_optimal_prefix(order):
+    g, s, t, k, w = _case(7)
+    weights = w if order == "weight" else None
+    eng = BatchPathEnum()
+    full = eng.run(g, [(s, t, k)], count_only=False, order=order,
+                   weights=weights).items[0].result
+    for mode in ("dfs", "join"):
+        got = BatchPathEnum().run(g, [(s, t, k)], count_only=False, mode=mode,
+                                  first_n=2, order=order,
+                                  weights=weights).items[0].result
+        assert got.as_tuples() == full.as_tuples()[:2]
+
+
+# ---------------------------------------------------------------------------
+# anytime prefix-optimality: every deadline cut is a ranked prefix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ORDERS)
+def test_expired_deadline_returns_empty_unexhausted(order):
+    g, s, t, k, w = _case(11)
+    weights = w if order == "weight" else None
+    idx = build_index(g, s, t, k)
+    for label, run in _runners(idx, k):
+        got = run(order=order, weights=weights,
+                  deadline=time.perf_counter() - 1.0)
+        assert got.count == 0 and not got.exhausted, label
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("order", ORDERS)
+def test_mid_run_deadline_is_rank_optimal_prefix(seed, order):
+    """Whatever instant the budget expires at, the emitted paths must be
+    exactly the best-ranked prefix — never a mid-rank subset."""
+    rng = np.random.default_rng(300 + seed)
+    g = erdos_renyi(40, 4.0, seed=300 + seed)
+    s, t = map(int, rng.choice(g.n, 2, replace=False))
+    k = 7
+    w = rng.integers(0, 4, size=g.m).astype(np.float64)
+    weights = w if order == "weight" else None
+    idx = build_index(g, s, t, k)
+    full = enumerate_paths_idx(idx, order=order, weights=weights).as_tuples()
+    for label, run in _runners(idx, k):
+        for budget in (0.0005, 0.002, 0.01):
+            got = run(order=order, weights=weights,
+                      deadline=time.perf_counter() + budget)
+            seq = got.as_tuples()
+            assert seq == full[:len(seq)], (label, budget)
+            if got.exhausted:
+                assert len(seq) == len(full), (label, budget)
+
+
+# ---------------------------------------------------------------------------
+# unranked canonicalization: order=None exhausted output is plan-invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(10))
+def test_unranked_exhausted_order_is_canonical_across_backends(seed):
+    """Regression (PR 6): pre-canonicalization, dfs/join/device emitted
+    the same *set* in different orders, so downstream pagination flapped
+    with the optimizer's plan choice.  Exhausted unranked results are now
+    (length, lex)-sorted everywhere."""
+    g, s, t, k, w = _case(400 + seed)
+    idx = build_index(g, s, t, k)
+    want = sorted(oracle.enumerate_paths(g, s, t, k),
+                  key=lambda p: (len(p), p))
+    assert enumerate_paths_idx(idx).as_tuples() == want
+    assert enumerate_paths_idx(idx, backend="device").as_tuples() == want
+    for cut in {1, max(1, k // 2), k - 1}:
+        assert enumerate_paths_join(idx, cut=cut).as_tuples() == want
+    for mode in ("auto", "dfs", "join"):
+        out = BatchPathEnum().run(g, [(s, t, k)], count_only=False, mode=mode)
+        assert out.items[0].result.as_tuples() == want
+
+
+# ---------------------------------------------------------------------------
+# PathEnum front door
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ("dfs", "join"))
+@pytest.mark.parametrize("order", ORDERS)
+def test_pathenum_query_order_threading(mode, order):
+    g, s, t, k, w = _case(21)
+    weights = w if order == "weight" else None
+    want = oracle.enumerate_paths(g, s, t, k, order=order, weights=weights)
+    out = PathEnum().query(g, s, t, k, mode=mode, order=order,
+                           weights=weights)
+    assert out.result.as_tuples() == want
+    top = PathEnum().query(g, s, t, k, mode=mode, first_n=3, order=order,
+                           weights=weights)
+    assert top.result.as_tuples() == want[:3]
+
+
+# ---------------------------------------------------------------------------
+# serving: sync front-end
+# ---------------------------------------------------------------------------
+
+def _resp_paths(resp):
+    if resp.paths is None:
+        return []
+    return [tuple(int(x) for x in row if x != PAD) for row in resp.paths]
+
+
+def _two_tenant_registry(seed):
+    g, s, t, k, w = _case(600 + seed)
+    reg = GraphRegistry()
+    reg.register("weighted", g, edge_weights=w)
+    reg.register("plain", g)                      # no weights registered
+    return reg, g, s, t, k, w
+
+
+def test_sync_server_ranked_and_no_weights_rejection():
+    reg, g, s, t, k, w = _two_tenant_registry(0)
+    reqs = [
+        PathQueryRequest(uid=0, s=s, t=t, k=k, count_only=False,
+                         graph_id="weighted", order="weight"),
+        PathQueryRequest(uid=1, s=s, t=t, k=k, count_only=False,
+                         graph_id="plain", order="weight"),
+        PathQueryRequest(uid=2, s=s, t=t, k=k, count_only=False,
+                         graph_id="plain", order="hops"),
+    ]
+    resps, _ = HcPEServer(reg).serve(reqs)
+    want_w = oracle.enumerate_paths(g, s, t, k, order="weight", weights=w)
+    assert resps[0].status == STATUS_OK
+    assert _resp_paths(resps[0]) == want_w
+    # weight rank against a weightless tenant: admission rejection,
+    # never an exception, zero results
+    assert resps[1].status == STATUS_REJECTED_NO_WEIGHTS
+    assert resps[1].count == 0
+    # hops rank needs no weights
+    assert resps[2].status == STATUS_OK
+    assert _resp_paths(resps[2]) == oracle.enumerate_paths(g, s, t, k,
+                                                           order="hops")
+
+
+def test_sync_server_groups_by_order():
+    """Same (graph, count_only, first_n) but different order must not
+    share an engine batch — the 4-tuple GroupKey keeps them apart."""
+    reg, g, s, t, k, w = _two_tenant_registry(1)
+    reqs = [
+        PathQueryRequest(uid=0, s=s, t=t, k=k, count_only=False,
+                         graph_id="weighted", order="weight"),
+        PathQueryRequest(uid=1, s=s, t=t, k=k, count_only=False,
+                         graph_id="weighted", order="hops"),
+        PathQueryRequest(uid=2, s=s, t=t, k=k, count_only=False,
+                         graph_id="weighted"),
+    ]
+    resps, _ = HcPEServer(reg).serve(reqs)
+    assert _resp_paths(resps[0]) == oracle.enumerate_paths(
+        g, s, t, k, order="weight", weights=w)
+    assert _resp_paths(resps[1]) == oracle.enumerate_paths(
+        g, s, t, k, order="hops")
+    assert oracle.paths_as_set(_resp_paths(resps[2])) == \
+        oracle.paths_as_set(oracle.enumerate_paths(g, s, t, k))
+
+
+# ---------------------------------------------------------------------------
+# serving: async front-end
+# ---------------------------------------------------------------------------
+
+def test_async_server_rejects_unknown_order_string():
+    g = erdos_renyi(10, 2.0, seed=2)
+
+    async def drive():
+        async with AsyncHcPEServer(g) as srv:
+            with pytest.raises(ValueError):
+                await srv.submit(PathQueryRequest(uid=0, s=0, t=1, k=3,
+                                                  order="fastest"))
+
+    asyncio.run(drive())
+
+
+def test_async_server_ranked_serving_and_admission():
+    reg, g, s, t, k, w = _two_tenant_registry(2)
+    want_w = oracle.enumerate_paths(g, s, t, k, order="weight", weights=w)
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=1.0) as srv:
+            ok, rej, topn = await asyncio.gather(
+                srv.submit(PathQueryRequest(
+                    uid=0, s=s, t=t, k=k, count_only=False,
+                    graph_id="weighted", order="weight")),
+                srv.submit(PathQueryRequest(
+                    uid=1, s=s, t=t, k=k, count_only=False,
+                    graph_id="plain", order="weight")),
+                srv.submit(PathQueryRequest(
+                    uid=2, s=s, t=t, k=k, count_only=False, first_n=2,
+                    graph_id="weighted", order="weight")),
+            )
+            return ok, rej, topn, srv.stats.rejected_no_weights
+
+    ok, rej, topn, n_rej = asyncio.run(drive())
+    assert ok.status == STATUS_OK and _resp_paths(ok) == want_w
+    assert rej.status == STATUS_REJECTED_NO_WEIGHTS and rej.count == 0
+    assert n_rej == 1
+    # EDF front-end under order: first_n is the top-n, not "some n"
+    assert _resp_paths(topn) == want_w[:2]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer: prefix-optimality as a property
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def ranked_cut(draw):
+        n = draw(st.integers(5, 18))
+        m = draw(st.integers(2, 3 * n))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        g = from_edges(n, np.array(edges, dtype=np.int64))
+        s = draw(st.integers(0, n - 1))
+        t = draw(st.integers(0, n - 1).filter(lambda x: x != s))
+        k = draw(st.integers(2, 6))
+        order = draw(st.sampled_from(["hops", "weight"]))
+        weights = None
+        if order == "weight":
+            weights = np.array(draw(st.lists(
+                st.sampled_from([0.0, 1.0, 1.5]),
+                min_size=g.m, max_size=g.m)), dtype=np.float64)
+        first_n = draw(st.integers(0, 12))
+        return g, s, t, k, order, weights, first_n
+
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(ranked_cut())
+    def test_hypothesis_any_first_n_cut_is_prefix(case):
+        g, s, t, k, order, weights, first_n = case
+        idx = build_index(g, s, t, k)
+        full = enumerate_paths_idx(idx, order=order,
+                                   weights=weights).as_tuples()
+        for label, run in _runners(idx, k):
+            got = run(order=order, weights=weights, first_n=first_n)
+            assert got.as_tuples() == full[:first_n], label
+            assert got.exhausted == (max(first_n, 1) > len(full)), label
