@@ -1,0 +1,39 @@
+"""repro-lint: project-invariant static analysis (DESIGN.md §11).
+
+The repo's cross-layer conventions — the Pallas kernel contracts (§9),
+the compat-only jax boundary (§6), the cooperative-deadline loops (§7),
+float64 rank costs (§10), the documented serving surface — are purely
+syntactic properties of the source tree, so they are guarded by AST
+passes rather than by tests that can only sample them.  One entry
+point, identical locally and in CI:
+
+    python -m repro.analysis --strict
+
+Programmatic surface: ``lint_repo()`` runs the full registry over the
+repo walk and returns a ``LintReport``; ``run_passes`` is the
+lower-level hook the tests use to aim individual passes at fixture
+files.  Rule catalogue and suppression policy: DESIGN.md §11.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional, Sequence
+
+from .framework import (Finding, LintContext, LintPass, LintReport,
+                        SourceFile, repo_root, run_passes, walk_repo)
+from .passes import ALL_PASSES, PASS_BY_NAME
+
+__all__ = [
+    "ALL_PASSES", "PASS_BY_NAME", "Finding", "LintContext", "LintPass",
+    "LintReport", "SourceFile", "lint_repo", "repo_root", "run_passes",
+    "walk_repo",
+]
+
+
+def lint_repo(root: Optional[Path] = None,
+              rules: Optional[Sequence[str]] = None) -> LintReport:
+    """Run the full registry (or the named ``rules``) over the repo walk
+    and return the report.  Raises KeyError on an unknown rule name."""
+    passes = ALL_PASSES if rules is None else [
+        PASS_BY_NAME[r] for r in rules]
+    return run_passes(passes, root=root)

@@ -1,0 +1,139 @@
+"""kernel-contract: the Pallas kernel layout/dtype contracts (DESIGN.md §9, §11).
+
+Every kernel under ``src/repro/kernels/`` rides one set of conventions
+the host/device parity harness depends on:
+
+  * every ``pallas_call`` site declares an explicit ``grid=`` and plumbs
+    an ``interpret=`` switch, so the CPU validation container can run the
+    same call through the Pallas interpreter (the kernels' CI leg pins
+    ``JAX_PLATFORMS=cpu`` and relies on it);
+  * the ``PAD`` sentinel is shared: a kernels module that re-declares
+    ``PAD`` must pin it to −1 (``core.graph.PAD`` — inert-row semantics
+    break bit-for-bit parity if the sentinels diverge);
+  * path/index matrices are int32 end to end — wider or unsigned integer
+    dtypes (``int64``/``uint32``/…) in kernel code silently double VMEM
+    footprints or break the offset gathers on TPU;
+  * every public wrapper in ``ops.py`` that dispatches to a Pallas entry
+    (``*_pallas``) must also register the pure-jnp oracle path from
+    ``ref.py`` (the ``REPRO_PALLAS=off`` A/B fallback) and forward the
+    ``interpret=`` switch to the kernel.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from ..framework import Finding, LintPass, SourceFile
+
+# the shared sentinel, pinned by core.graph.PAD and
+# tests/test_frontier_kernel.py
+PAD_VALUE = -1
+
+_BAD_INT_DTYPES = frozenset({
+    "int64", "int16", "int8", "uint8", "uint16", "uint32", "uint64"})
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    """True for ``pl.pallas_call(...)`` / ``pallas_call(...)`` sites."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr == "pallas_call"
+    return isinstance(fn, ast.Name) and fn.id == "pallas_call"
+
+
+def _kwarg_names(node: ast.Call) -> List[str]:
+    return [kw.arg for kw in node.keywords if kw.arg is not None]
+
+
+def _calls_pallas_entry(node: ast.Call) -> bool:
+    """True for calls to a ``*_pallas`` alias (the ops.py convention for
+    imported kernel entry points)."""
+    fn = node.func
+    name = fn.id if isinstance(fn, ast.Name) else (
+        fn.attr if isinstance(fn, ast.Attribute) else "")
+    return name.endswith("_pallas")
+
+
+class KernelContractPass(LintPass):
+    """AST checks for the §9 kernel conventions over ``kernels/*.py``."""
+
+    name = "kernel-contract"
+    description = ("pallas_call sites declare grid=/interpret=, PAD stays "
+                   "-1, integer matrices stay int32, and ops.py wrappers "
+                   "register a ref.py oracle fallback (DESIGN.md §9)")
+    scope = ("src/repro/kernels/*.py",)
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        tree = sf.tree
+        assert tree is not None
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_pallas_call(node):
+                kwargs = _kwarg_names(node)
+                if "interpret" not in kwargs:
+                    yield self.finding(sf, node, (
+                        "pallas_call without an interpret= switch — the "
+                        "CPU validation path (Pallas interpreter) must "
+                        "stay reachable"))
+                if "grid" not in kwargs:
+                    yield self.finding(sf, node, (
+                        "pallas_call without an explicit grid= — implicit "
+                        "grids hide the block layout the parity harness "
+                        "pins"))
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in _BAD_INT_DTYPES:
+                yield self.finding(sf, node, (
+                    f"integer dtype {node.attr} in kernel code — path and "
+                    f"index matrices are int32 by contract (DESIGN.md §9)"))
+        # module-level PAD re-declarations must agree with core.graph.PAD
+        for node in tree.body:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "PAD":
+                        yield from self._check_pad(sf, node)
+        if sf.rel.rsplit("/", 1)[-1] == "ops.py":
+            yield from self._check_ops_registration(sf, tree)
+
+    def _check_pad(self, sf: SourceFile,
+                   node: ast.Assign) -> Iterator[Finding]:
+        value = node.value
+        ok = (isinstance(value, ast.UnaryOp)
+              and isinstance(value.op, ast.USub)
+              and isinstance(value.operand, ast.Constant)
+              and value.operand.value == -PAD_VALUE)
+        ok = ok or (isinstance(value, ast.Constant)
+                    and value.value == PAD_VALUE)
+        if not ok:
+            yield self.finding(sf, node, (
+                f"PAD re-declared with a value other than {PAD_VALUE} — "
+                f"the sentinel is shared with core.graph.PAD; divergence "
+                f"breaks PAD-row inertness and host/device parity"))
+
+    def _check_ops_registration(self, sf: SourceFile,
+                                tree: ast.Module) -> Iterator[Finding]:
+        """Every ops.py function calling a ``*_pallas`` entry must also
+        reference the ``ref`` oracle module and forward ``interpret=``."""
+        for fn in tree.body:
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            pallas_calls = [n for n in ast.walk(fn)
+                            if isinstance(n, ast.Call)
+                            and _calls_pallas_entry(n)]
+            if not pallas_calls:
+                continue
+            uses_ref = any(
+                isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name)
+                and n.value.id == "ref" for n in ast.walk(fn))
+            if not uses_ref:
+                yield self.finding(sf, fn, (
+                    f"{fn.name} dispatches to a Pallas kernel but never "
+                    f"references the ref.py oracle — the REPRO_PALLAS=off "
+                    f"fallback path is unregistered"))
+            for call in pallas_calls:
+                if "interpret" not in _kwarg_names(call):
+                    yield self.finding(sf, call, (
+                        f"{fn.name} calls a Pallas entry without "
+                        f"forwarding interpret= — the CPU container "
+                        f"would try to compile Mosaic"))
+
+
+PASSES = [KernelContractPass()]

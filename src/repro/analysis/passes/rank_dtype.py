@@ -1,0 +1,55 @@
+"""rank-cost-dtype: rank-cost arithmetic stays float64 (DESIGN.md §10, §11).
+
+Ranked enumeration's cross-backend bit-for-bit guarantee — every engine
+(heap, buckets, join) and the oracle emit the *same* ordered sequence —
+rests on one numeric convention: path costs accumulate left-to-right in
+float64, everywhere.  A single ``float32`` cast in the cost path breaks
+tie resolution a few ulps at a time: the ordered-sequence fuzz suite
+catches it eventually, but only on inputs whose costs happen to collide,
+and the failure reads as a mysterious swap deep in a 200-seed sweep.
+
+The rule, over ``core/rank.py`` and ``core/join.py`` (the two modules
+that own cost arithmetic): no 32/16-bit float dtype may be spelled at
+all — neither as an attribute (``np.float32``, ``jnp.float16``) nor as
+a string dtype (``astype("float32")``).  Integer dtypes are untouched
+(path matrices are int32 by the §9 kernel contract).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import Finding, LintPass, SourceFile
+
+_NARROW_FLOATS = frozenset({"float32", "float16", "bfloat16"})
+
+
+class RankCostDtypePass(LintPass):
+    """AST scan for narrow float dtypes in the rank-cost modules."""
+
+    name = "rank-cost-dtype"
+    description = ("no float32/float16 spelled in core/rank.py or "
+                   "core/join.py — rank costs accumulate in float64 "
+                   "(DESIGN.md §10)")
+    scope = ("src/repro/core/rank.py", "src/repro/core/join.py")
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        tree = sf.tree
+        assert tree is not None
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in _NARROW_FLOATS:
+                yield self.finding(sf, node, (
+                    f"{node.attr} in a rank-cost module — cost "
+                    f"accumulation is float64 end to end; a narrow cast "
+                    f"breaks cross-backend tie resolution (DESIGN.md §10)"))
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str) \
+                    and node.value in _NARROW_FLOATS:
+                yield self.finding(sf, node, (
+                    f"string dtype {node.value!r} in a rank-cost module — "
+                    f"cost accumulation is float64 end to end "
+                    f"(DESIGN.md §10)"))
+
+
+PASSES = [RankCostDtypePass()]

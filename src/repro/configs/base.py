@@ -8,7 +8,7 @@ used by tests — the full configs are exercised only through the dry-run
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

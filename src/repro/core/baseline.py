@@ -14,8 +14,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-import numpy as np
-
 from .enumerate import EnumStats
 from .graph import Graph
 from .oracle import bfs_dist_np

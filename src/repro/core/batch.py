@@ -32,7 +32,7 @@ import collections
 import dataclasses
 import hashlib
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -54,7 +54,7 @@ QueryKey = Tuple[str, int, int, int, int]  # (graph_id, s, t, k, edge_mask_hash)
 DEFAULT_GRAPH_ID = "default"
 
 
-def tenant_of(key) -> str:
+def tenant_of(key: Union[QueryKey, Tuple[int, int, int, int]]) -> str:
     """The tenant a cache key belongs to.
 
     5-tuple ``QueryKey``s carry their ``graph_id`` first; legacy 4-tuple
@@ -120,7 +120,7 @@ class IndexCache:
     """
 
     def __init__(self, capacity: int = 256,
-                 tenant_quotas: Optional[Dict[str, int]] = None):
+                 tenant_quotas: Optional[Dict[str, int]] = None) -> None:
         if capacity < 0:
             raise ValueError("capacity must be >= 0")
         self.capacity = capacity
@@ -393,7 +393,8 @@ class BatchOutput:
         """Sum of all per-query counts."""
         return int(self.counts.sum())
 
-    def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+    def latency_percentiles(self, qs: Sequence[int] = (50, 90, 99)
+                            ) -> Dict[str, float]:
         """Attributable per-query latency percentiles in milliseconds."""
         lats = np.array([it.latency_seconds for it in self.items])
         if lats.size == 0:
@@ -427,7 +428,7 @@ class BatchPathEnum:
                  max_partials: Optional[int] = 20_000_000,
                  cache_capacity: int = 256, bfs_block: int = 128,
                  tenant_quotas: Optional[Dict[str, int]] = None,
-                 backend: str = "host"):
+                 backend: str = "host") -> None:
         self.engine = PathEnum(tau=tau, chunk_size=chunk_size,
                                max_partials=max_partials, backend=backend)
         self.cache = IndexCache(capacity=cache_capacity,

@@ -20,7 +20,6 @@ than the join method").
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional
 
 import numpy as np

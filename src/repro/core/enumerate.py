@@ -43,7 +43,7 @@ import dataclasses
 import heapq
 import os
 import time
-from typing import Callable, Iterator, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

@@ -10,7 +10,6 @@ safe in int32.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

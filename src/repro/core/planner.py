@@ -16,8 +16,6 @@ import dataclasses
 import time
 from typing import Optional
 
-import numpy as np
-
 from . import estimator as est
 from .index import LightweightIndex
 

@@ -32,9 +32,12 @@ honors.  Parallel edges are out of scope (``from_edges`` dedups them).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from .index import LightweightIndex
 
 ORDERS = ("hops", "weight")
 
@@ -116,7 +119,7 @@ def canonical_perm(paths: np.ndarray, costs: np.ndarray) -> np.ndarray:
     return np.lexsort(cols + (costs,))
 
 
-def index_edge_table(idx, values: np.ndarray
+def index_edge_table(idx: "LightweightIndex", values: np.ndarray
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """A vectorized (u, v) -> value lookup table over *index* edges.
 
@@ -135,7 +138,8 @@ def index_edge_table(idx, values: np.ndarray
     return keys[order], vals[order]
 
 
-def path_costs(idx, paths: np.ndarray, lengths: np.ndarray,
+def path_costs(idx: "LightweightIndex", paths: np.ndarray,
+               lengths: np.ndarray,
                spec: Optional[RankSpec]) -> np.ndarray:
     """Canonical per-row costs for finished path rows.
 
@@ -158,7 +162,8 @@ def path_costs(idx, paths: np.ndarray, lengths: np.ndarray,
     return costs
 
 
-def remaining_lower_bound(idx, spec: RankSpec) -> np.ndarray:
+def remaining_lower_bound(idx: "LightweightIndex",
+                          spec: RankSpec) -> np.ndarray:
     """Admissible per-vertex lower bound on the cost still needed to
     reach ``t`` (the best-first heuristic of DESIGN.md §10).
 
@@ -189,7 +194,8 @@ def remaining_lower_bound(idx, spec: RankSpec) -> np.ndarray:
     return wd
 
 
-def edge_step_costs(idx, spec: RankSpec, pos: np.ndarray) -> np.ndarray:
+def edge_step_costs(idx: "LightweightIndex", spec: RankSpec,
+                    pos: np.ndarray) -> np.ndarray:
     """Per-candidate incremental cost for index positions ``pos`` (the
     frontier expansion's gather offsets): 1 for hops, the edge weight
     for weight ranking."""

@@ -7,7 +7,7 @@ against the light-weight index.
 """
 from __future__ import annotations
 
-from typing import List, Set, Tuple
+from typing import List, Set
 
 import numpy as np
 

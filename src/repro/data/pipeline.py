@@ -16,7 +16,7 @@ multi-host pattern the launcher uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -15,8 +15,7 @@ variant benchmarked in benchmarks/collectives.py.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

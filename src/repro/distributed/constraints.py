@@ -9,7 +9,7 @@ choice inherits the divisibility fallbacks.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -19,7 +19,6 @@ across queries; each query's frontier expansion runs on its data-shard
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax

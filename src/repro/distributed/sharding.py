@@ -19,7 +19,7 @@ dry-run JSON records the chosen spec per cell so the fallbacks are visible.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

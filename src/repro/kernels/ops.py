@@ -32,7 +32,8 @@ def _enabled() -> bool:
     return os.environ.get("REPRO_PALLAS", "on") != "off"
 
 
-def _pad_to(x: jnp.ndarray, axis: int, mult: int, value) -> jnp.ndarray:
+def _pad_to(x: jnp.ndarray, axis: int, mult: int,
+            value: float) -> jnp.ndarray:
     size = x.shape[axis]
     pad = (-size) % mult
     if pad == 0:
@@ -82,7 +83,7 @@ def bfs_dense(adj: jnp.ndarray, src: int | jnp.ndarray, k: int, *,
     n = adj.shape[0]
     dist = jnp.full((n,), inf, dtype=jnp.float32).at[src].set(0.0)
 
-    def body(_, d):
+    def body(_: int, d: jnp.ndarray) -> jnp.ndarray:
         return minplus_spmv(adj, d, inf=inf, block=block)
 
     return jax.lax.fori_loop(0, k, body, dist)
@@ -96,7 +97,8 @@ def _next_pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length() if x > 1 else 1
 
 
-def _children(paths, vflat, idxs, depth, max_deg):
+def _children(paths: jnp.ndarray, vflat: jnp.ndarray, idxs: jnp.ndarray,
+              depth: jnp.ndarray, max_deg: int) -> jnp.ndarray:
     """Materialize child rows for the compacted candidate indices: gather
     each candidate's parent row and write its vertex at column depth+1."""
     rows = jnp.take(paths, idxs // max_deg, axis=0)          # (cap, k1)
@@ -107,8 +109,12 @@ def _children(paths, vflat, idxs, depth, max_deg):
 @functools.partial(jax.jit,
                    static_argnames=("max_deg", "interpret", "use_ref",
                                     "want_cont"))
-def _frontier_expand_jit(paths, begin, end, dst, meta, *, max_deg: int,
-                         interpret: bool, use_ref: bool, want_cont: bool):
+def _frontier_expand_jit(
+        paths: jnp.ndarray, begin: jnp.ndarray, end: jnp.ndarray,
+        dst: jnp.ndarray, meta: jnp.ndarray, *, max_deg: int,
+        interpret: bool, use_ref: bool, want_cont: bool
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
     """Masks (Pallas kernel or jnp ref) + compaction, one fused jit."""
     C, k1 = paths.shape
     depth = meta[0]
@@ -140,8 +146,12 @@ def _frontier_expand_jit(paths, begin, end, dst, meta, *, max_deg: int,
     return emit_rows, cont_rows, n_emit, n_cont, counters
 
 
-def frontier_expand(paths, fwd_begin, fwd_end, fwd_dst, *, depth: int,
-                    t: int, max_deg: int, want_cont: bool = True):
+def frontier_expand(
+        paths: np.ndarray | jnp.ndarray, fwd_begin: np.ndarray,
+        fwd_end: np.ndarray, fwd_dst: np.ndarray, *, depth: int,
+        t: int, max_deg: int, want_cont: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
     """One IDX-DFS hop for a whole chunk, on device (DESIGN.md §9).
 
     paths is the (rows, k+1) int32 partial-path matrix at ``depth`` (PAD
@@ -191,7 +201,8 @@ def frontier_expand(paths, fwd_begin, fwd_end, fwd_dst, *, depth: int,
 # LM attention ops
 # ---------------------------------------------------------------------------
 
-def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
                     scale: float | None = None, bq: int = 128,
                     bk: int = 128) -> jnp.ndarray:
     if not _enabled():
@@ -224,7 +235,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     return out[:, :Lq]
 
 
-def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None,
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                     scale: float | None = None,
                      bs: int = 512) -> jnp.ndarray:
     if not _enabled():
         return ref.decode_attention_ref(q, k_cache, v_cache, lengths,

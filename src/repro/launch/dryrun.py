@@ -18,7 +18,6 @@ Usage:
       --shape long_500k --mesh multi
 """
 import argparse
-import functools
 import json
 import re
 import time
@@ -26,7 +25,6 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..compat import set_mesh
@@ -161,7 +159,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from ..distributed import sharding as shard_mod
     from ..launch import specs as specs_mod
     from ..launch.mesh import make_production_mesh
-    from ..models import transformer
     from ..optim import adamw
     from ..training import step as step_mod
     import dataclasses

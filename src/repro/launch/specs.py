@@ -4,7 +4,7 @@ never allocates real arrays (weak-type-correct, shardable).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

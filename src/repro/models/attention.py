@@ -8,7 +8,6 @@ interchangeable (tests/test_models.py asserts parity).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

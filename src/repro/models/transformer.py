@@ -11,8 +11,7 @@ group — plus an explicit tail for non-divisible depths.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -160,7 +160,7 @@ class AsyncHcPEServer:
                  default_deadline_ms: Optional[float] = None,
                  enforce_deadlines: bool = False,
                  report_capacity: int = 256,
-                 backend: str = "host"):
+                 backend: str = "host") -> None:
         self.registry = GraphRegistry.wrap(graph)
         self.engine = engine or BatchPathEnum(backend=backend)
         self.registry.bind_engine(self.engine)

@@ -14,7 +14,7 @@ as the harness for decode-shape validation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +43,9 @@ class ServeEngine:
     re-fill on completion.  Not tenant-aware — multi-graph tenancy is an
     HcPE-serving concern (DESIGN.md §8); this engine serves one model."""
 
-    def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+    def __init__(self, cfg: ArchConfig, params: Any, batch_slots: int = 4,
+                 max_len: int = 512, temperature: float = 0.0,
+                 seed: int = 0) -> None:
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -67,7 +68,7 @@ class ServeEngine:
     def _reset_slot(self, slot: int) -> None:
         """Zero a slot's cache + length before re-use (previous occupant's
         KV/state must not leak into the next request)."""
-        def zero(x):
+        def zero(x: jnp.ndarray) -> jnp.ndarray:
             if x.ndim >= 2 and x.shape[1] == self.B:      # (layers, B, ...)
                 return x.at[:, slot].set(0)
             if x.ndim >= 1 and x.shape[0] == self.B:      # (B, ...)
@@ -98,12 +99,13 @@ class ServeEngine:
         _, cache, _ = self.step_fn(self.params, toks, self.cache, self.lens,
                                    sub)
         # commit only the target slot's cache advance
-        def commit(new, old):
+        def commit(new: jnp.ndarray, old: jnp.ndarray) -> jnp.ndarray:
             return jnp.concatenate([old[:slot], new[slot:slot + 1],
                                     old[slot + 1:]], axis=0) \
                 if new.ndim >= 1 and new.shape[0] == self.B else new
         # caches are stacked (layers, B, ...) — commit along the B axis
-        def commit_tree(new, old):
+        def commit_tree(new: jnp.ndarray,
+                        old: jnp.ndarray) -> jnp.ndarray:
             if new.ndim >= 2 and new.shape[1] == self.B:
                 return jnp.concatenate(
                     [old[:, :slot], new[:, slot:slot + 1], old[:, slot + 1:]],

@@ -236,7 +236,7 @@ class HcPEServer:
 
     def __init__(self, graph: Union[Graph, GraphRegistry],
                  engine: Optional[BatchPathEnum] = None,
-                 backend: str = "host"):
+                 backend: str = "host") -> None:
         self.registry = GraphRegistry.wrap(graph)
         # `backend` configures the default-constructed engine's DFS
         # expansion (DESIGN.md §9); callers handing their own engine set

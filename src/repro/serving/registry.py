@@ -62,7 +62,7 @@ class GraphRegistry:
     Both servers bind their engine automatically.
     """
 
-    def __init__(self, default_graph: Optional[Graph] = None):
+    def __init__(self, default_graph: Optional[Graph] = None) -> None:
         self._entries: Dict[str, TenantEntry] = {}
         # weak: a registry outliving its servers (per-batch HcPEServer
         # over a long-lived registry) must not pin their engines/caches

@@ -10,9 +10,6 @@ temperature sampling) used by the serving engine and the decode dry-runs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -19,11 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ArchConfig

@@ -1,0 +1,10 @@
+"""Known-bad serving module: blocking calls inside async def."""
+import time
+
+
+class Server:
+    async def submit(self, req):
+        time.sleep(0.1)  # blocks the event loop
+        out = self.engine.run([req])  # enumeration on the loop
+        out.arr.block_until_ready()  # device sync on the loop
+        return out

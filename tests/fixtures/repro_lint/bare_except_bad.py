@@ -1,0 +1,8 @@
+"""Known-bad module: a bare except swallowing everything."""
+
+
+def load(path):
+    try:
+        return path.read_text()
+    except:  # noqa: E722 — the rule under test
+        return None

@@ -1,0 +1,15 @@
+"""Known-good module: named exceptions, deliberate BaseException."""
+
+
+def load(path):
+    try:
+        return path.read_text()
+    except (OSError, UnicodeDecodeError):
+        return None
+
+
+def guard(fn):
+    try:
+        return fn()
+    except BaseException:
+        raise

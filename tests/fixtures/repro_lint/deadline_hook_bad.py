@@ -1,0 +1,9 @@
+"""Known-bad driver: an emitting loop that never consults its deadline."""
+
+
+def drive(chunks, stats, deadline=None):
+    results = []
+    for chunk in chunks:  # outermost, touches stats.*, no deadline ref
+        stats.chunks += 1
+        results.extend(chunk)
+    return results

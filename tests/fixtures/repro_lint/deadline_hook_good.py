@@ -1,0 +1,34 @@
+"""Known-good driver shapes for the deadline-hook rule."""
+import time
+
+
+def drive(chunks, stats, deadline=None):
+    results = []
+    for chunk in chunks:
+        if deadline is not None and time.monotonic() >= deadline:
+            break
+        stats.chunks += 1
+        for row in chunk:  # inner loop rides the outer check
+            stats.results += 1
+            results.append(row)
+    return results
+
+
+def drive_expired_idiom(chunks, stats, deadline=None):
+    def _expired():
+        return deadline is not None and time.monotonic() >= deadline
+
+    results = []
+    for chunk in chunks:
+        if _expired():
+            break
+        stats.chunks += 1
+        results.extend(chunk)
+    return results
+
+
+def no_deadline_param(chunks, stats):
+    # functions without a deadline parameter are out of scope
+    for chunk in chunks:
+        stats.chunks += 1
+    return stats

@@ -1,0 +1,4 @@
+"""Known-bad module: anchors a DESIGN.md section that does not exist.
+
+See DESIGN.md §99 for the rationale.
+"""

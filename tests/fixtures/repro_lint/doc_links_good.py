@@ -1,0 +1,4 @@
+"""Known-good module: every anchored section exists.
+
+See DESIGN.md §1 and the range DESIGN.md §6-7.
+"""

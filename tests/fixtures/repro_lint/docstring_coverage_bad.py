@@ -1,0 +1,10 @@
+"""Known-bad audited module: public slots undocumented, no §N anchor."""
+
+
+class Server:
+    def submit(self, req):
+        return req
+
+
+def helper(x):
+    return x

@@ -1,0 +1,17 @@
+"""Known-good audited module, fully documented (DESIGN.md §7)."""
+
+
+class Server:
+    """A documented public class."""
+
+    def submit(self, req):
+        """A documented public method."""
+        return req
+
+    def _internal(self, req):
+        return req  # private slots are out of scope
+
+
+def helper(x):
+    """A documented public function."""
+    return x

@@ -1,0 +1,14 @@
+"""Known-bad kernel module: violates every kernel-contract clause."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD = 0  # wrong sentinel: contract pins -1
+
+
+def kernel_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.int64)  # wide dtype
+
+
+def launch(x):
+    # no grid=, no interpret=
+    return pl.pallas_call(kernel_body, out_shape=x)(x)

@@ -1,0 +1,14 @@
+"""Known-good kernel module: every kernel-contract clause satisfied."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD = -1
+
+
+def kernel_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.int32)
+
+
+def launch(x, *, interpret=False):
+    return pl.pallas_call(kernel_body, out_shape=x, grid=(1,),
+                          interpret=interpret)(x)

@@ -1,0 +1,12 @@
+"""Known-bad module: mutable default arguments."""
+
+
+def collect(item, bucket=[]):
+    bucket.append(item)
+    return bucket
+
+
+def tally(key, counts=dict(), *, seen={}):
+    counts[key] = counts.get(key, 0) + 1
+    seen[key] = True
+    return counts

@@ -1,0 +1,11 @@
+"""Known-good module: None defaults, constructed inside."""
+
+
+def collect(item, bucket=None):
+    bucket = [] if bucket is None else bucket
+    bucket.append(item)
+    return bucket
+
+
+def scale(x, factor=1.0, label=""):
+    return x * factor, label

@@ -1,0 +1,11 @@
+"""Known-bad ops.py shape: Pallas dispatch without the ref oracle.
+
+Linted under the basename ``ops.py`` semantics only when named so; the
+test copies this file to a temp ``ops.py`` before aiming the rule.
+"""
+from .kernel_contract_good import launch as frontier_pallas
+
+
+def frontier(x):
+    # calls a *_pallas entry: no ref.* fallback, interpret= not forwarded
+    return frontier_pallas(x)

@@ -1,0 +1,9 @@
+"""Known-bad rank-cost module: narrow float dtypes in cost arithmetic."""
+import numpy as np
+
+
+def path_costs(weights, paths):
+    acc = np.zeros(len(paths), dtype=np.float32)  # attribute spelling
+    for col in paths.T:
+        acc += weights[col].astype("float16")  # string spelling
+    return acc

@@ -1,0 +1,10 @@
+"""Known-good rank-cost module: float64 end to end, int32 untouched."""
+import numpy as np
+
+
+def path_costs(weights, paths):
+    acc = np.zeros(len(paths), dtype=np.float64)
+    idx = paths.astype(np.int32)  # integer dtypes are out of scope
+    for col in idx.T:
+        acc += weights[col].astype("float64")
+    return acc

@@ -1,0 +1,4 @@
+"""Fixture exercising the suppression machinery (unused-import rule)."""
+import json  # repro-lint: disable=unused-import
+import os  # repro-lint: disable=all
+import sys  # no suppression: this one must still be flagged

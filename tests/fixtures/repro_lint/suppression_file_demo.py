@@ -1,0 +1,5 @@
+"""Fixture exercising file-level suppression (unused-import rule)."""
+# repro-lint: disable-file=unused-import
+import json
+import os
+import sys

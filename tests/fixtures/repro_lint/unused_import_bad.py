@@ -1,0 +1,8 @@
+"""Known-bad module: imports nothing uses."""
+import json
+import os as operating_system
+from typing import Dict, List
+
+
+def ls(path):
+    return sorted(path.iterdir())

@@ -1,0 +1,16 @@
+"""Known-good module: every import used, including via quoted annotation."""
+from __future__ import annotations
+
+import collections
+import json
+from typing import List
+
+__all__ = ["dump", "Cache"]
+
+
+def dump(items: List[int]) -> str:
+    return json.dumps(items)
+
+
+class Cache:
+    store: "collections.OrderedDict[str, int]"

@@ -4,11 +4,10 @@ These run on whichever jax the environment ships; every assertion is
 phrased against the capability probes so both sides of the skew stay
 exercised (CI runs a pinned-0.4.x leg and a latest-jax leg).  The last
 test enforces the layer's policy mechanically: no skew API spelled
-outside src/repro/compat.py.
+outside src/repro/compat.py — it is a thin wrapper over the
+``compat-boundary`` lint rule (DESIGN.md §11), which owns the symbol
+list and the exemptions.
 """
-import pathlib
-import re
-
 import numpy as np
 import pytest
 
@@ -72,26 +71,12 @@ def test_shard_map_unified_signature():
     np.testing.assert_allclose(np.asarray(out), np.arange(4.0))
 
 
-_SKEW = re.compile(
-    # modern-only spellings
-    r"jax\.set_mesh|jax\.shard_map|jax\.make_mesh"
-    r"|jax\.sharding\.AxisType|jax\.sharding\.get_abstract_mesh"
-    r"|jax\.sharding\.use_mesh"
-    # 0.4.x-only spellings
-    r"|jax\.experimental\.shard_map|check_vma|check_rep")
-
-
 def test_no_skew_symbol_outside_compat():
-    root = pathlib.Path(__file__).resolve().parents[1]
-    offenders = []
-    for sub in ("src", "tests", "benchmarks", "examples"):
-        for path in sorted((root / sub).rglob("*.py")):
-            if path.name in ("compat.py", "test_compat.py"):
-                continue
-            for ln, line in enumerate(path.read_text().splitlines(), 1):
-                if _SKEW.search(line):
-                    offenders.append(f"{path.relative_to(root)}:{ln}: "
-                                     f"{line.strip()}")
-    assert not offenders, (
+    """Thin wrapper over the compat-boundary lint rule (DESIGN.md §11):
+    the rule owns the skew-symbol list and the compat.py exemption."""
+    from repro.analysis import lint_repo
+
+    report = lint_repo(rules=["compat-boundary"])
+    assert not report.findings, (
         "skew jax APIs must go through repro/compat.py:\n"
-        + "\n".join(offenders))
+        + "\n".join(f.render() for f in report.findings))

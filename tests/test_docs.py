@@ -1,123 +1,27 @@
 """Docs gates: docstring coverage + link integrity (both run in CI).
 
-Two enforced-not-advisory checks (the docs analogue of
-test_compat.py's skew-symbol scan):
-
-  * **docstring coverage ≥ 90%** over the public surface of ``serving/``
-    and ``core/batch.py`` — an ``interrogate``-equivalent implemented on
-    ``ast`` so it needs no extra dependency.  Public = module docstring,
-    non-underscore classes, and non-underscore functions/methods.  Each
-    audited module's docstring must also carry its ``DESIGN.md §N``
-    anchor, so every public module is reachable from the design doc.
-  * **no dangling doc references** — every ``DESIGN.md §N`` anchor
-    spelled anywhere in README/DESIGN/EXPERIMENTS or a source/example
-    docstring must name a section that exists, and every relative
-    markdown link in the top-level docs must point at a real file.
+Thin wrappers over the ``docstring-coverage`` and ``doc-links`` lint
+rules (DESIGN.md §11) — the rules own the audited-module list, the
+public-slot definition and the anchor/link regexes; these tests keep
+the gates inside the tier-1 pytest run so a docs regression fails the
+same job a code regression does.
 """
-import ast
-import re
-from pathlib import Path
-
-import pytest
-
-REPO = Path(__file__).resolve().parents[1]
-SRC = REPO / "src" / "repro"
-
-# the audited set: the serving surface + the batch engine it fronts
-AUDITED_MODULES = sorted((SRC / "serving").glob("*.py")) + \
-    [SRC / "core" / "batch.py"]
-MIN_COVERAGE = 0.90
-
-
-def _public_docstring_slots(tree):
-    """Yield (qualname, has_docstring) for the module, public classes and
-    public functions/methods (nested defs excluded, like interrogate)."""
-    yield "<module>", ast.get_docstring(tree) is not None
-    for node in tree.body:
-        if isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
-            yield node.name, ast.get_docstring(node) is not None
-            for sub in node.body:
-                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                        and not sub.name.startswith("_"):
-                    yield f"{node.name}.{sub.name}", \
-                        ast.get_docstring(sub) is not None
-        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                and not node.name.startswith("_"):
-            yield node.name, ast.get_docstring(node) is not None
+from repro.analysis import lint_repo
 
 
 def test_docstring_coverage_gate():
-    covered, missing = 0, []
-    total = 0
-    for path in AUDITED_MODULES:
-        tree = ast.parse(path.read_text())
-        for qualname, has_doc in _public_docstring_slots(tree):
-            total += 1
-            if has_doc:
-                covered += 1
-            else:
-                missing.append(f"{path.relative_to(REPO)}::{qualname}")
-    coverage = covered / total
-    assert coverage >= MIN_COVERAGE, (
-        f"docstring coverage {coverage:.1%} < {MIN_COVERAGE:.0%} "
-        f"({covered}/{total}); missing: {missing}")
+    """Every public slot in the audited modules (serving/*.py +
+    core/batch.py) is documented and anchored into DESIGN.md."""
+    report = lint_repo(rules=["docstring-coverage"])
+    assert not report.findings, (
+        "audited public surface has undocumented slots:\n"
+        + "\n".join(f.render() for f in report.findings))
 
 
-@pytest.mark.parametrize("path", AUDITED_MODULES,
-                         ids=lambda p: str(p.relative_to(SRC)))
-def test_audited_modules_anchor_into_design_doc(path):
-    """Every audited module's docstring names its DESIGN.md section, so
-    readers can jump from code to design rationale."""
-    doc = ast.get_docstring(ast.parse(path.read_text())) or ""
-    assert re.search(r"DESIGN\.md §\d+", doc), (
-        f"{path.relative_to(REPO)} module docstring lacks a "
-        f"'DESIGN.md §N' anchor")
-
-
-# ---------------------------------------------------------------------------
-# doc-link integrity
-# ---------------------------------------------------------------------------
-
-TOP_DOCS = ["README.md", "DESIGN.md", "EXPERIMENTS.md"]
-
-
-def _design_sections():
-    text = (REPO / "DESIGN.md").read_text()
-    return {int(m) for m in re.findall(r"^## §(\d+)", text, re.MULTILINE)}
-
-
-def _anchor_sources():
-    for name in TOP_DOCS:
-        yield REPO / name
-    for sub in ("src", "examples", "benchmarks", "tests"):
-        yield from sorted((REPO / sub).rglob("*.py"))
-
-
-def test_design_section_references_resolve():
-    sections = _design_sections()
-    assert sections, "DESIGN.md defines no '## §N' sections"
-    dangling = []
-    for path in _anchor_sources():
-        for m in re.finditer(r"DESIGN\.md §(\d+)(?:-(\d+))?",
-                             path.read_text()):
-            lo = int(m.group(1))
-            hi = int(m.group(2)) if m.group(2) else lo
-            for n in range(lo, hi + 1):
-                if n not in sections:
-                    dangling.append(
-                        f"{path.relative_to(REPO)}: DESIGN.md §{n}")
-    assert not dangling, f"dangling DESIGN.md section references: {dangling}"
-
-
-def test_relative_links_in_top_docs_resolve():
-    broken = []
-    for name in TOP_DOCS:
-        text = (REPO / name).read_text()
-        for m in re.finditer(r"\]\(([^)]+)\)", text):
-            target = m.group(1).split("#")[0].strip()
-            if not target or target.startswith(("http://", "https://",
-                                                "mailto:")):
-                continue
-            if not (REPO / target).exists():
-                broken.append(f"{name}: ({m.group(1)})")
-    assert not broken, f"broken relative links: {broken}"
+def test_doc_references_resolve():
+    """Every DESIGN.md §N anchor and every relative link in the top
+    docs resolves."""
+    report = lint_repo(rules=["doc-links"])
+    assert not report.findings, (
+        "dangling doc references:\n"
+        + "\n".join(f.render() for f in report.findings))
