@@ -33,6 +33,8 @@ def main() -> None:
     suites.append(("fig_device_enum", device_enum.run))
     from . import ranked_enum
     suites.append(("fig_ranked_enum", ranked_enum.run))
+    from . import streaming
+    suites.append(("streaming", streaming.run))
     suites.append(("kernels", kernels_bench.run))
     suites.append(("roofline", roofline.run))
     if not args.skip_collectives:

@@ -1,0 +1,101 @@
+"""Streaming mutation + metrics-plane benchmark (DESIGN.md §12).
+
+    PYTHONPATH=src python -m benchmarks.run --only streaming
+
+Three costs an operator of a streaming deployment budgets for:
+
+  * **mutation** — ``GraphRegistry.mutate`` is a versioned-copy rebuild
+    (``with_edges`` = edge-set diff + ``from_edges``), so its cost is a
+    full CSR build regardless of delta size; the rows report µs per
+    mutate against the cost of the cold ``from_edges`` build it wraps
+    (the ratio is the diff overhead, expected near 1).
+  * **re-warm** — a mutation purges the tenant's cache slice, so the
+    first post-mutation serve pays cold index builds; the rows report
+    the warm-serve, post-mutation-serve and re-warmed-serve costs of one
+    fixed workload (the middle row is the invalidation price).
+  * **observation** — ``snapshot()`` + exports must be cheap enough to
+    scrape every few seconds: µs per capture, per ``to_json``, per
+    ``to_prometheus`` on a many-tenant server.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import erdos_renyi, from_edges
+from repro.serving import GraphRegistry, HcPEServer, PathQueryRequest
+from repro.serving.metrics import snapshot
+
+Row = Tuple[str, float, str]
+
+
+def _time_us(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(delta: int = 64, reps: int = 10) -> List[Row]:
+    """One suite run; returns ``(name, value, derived)`` CSV rows."""
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    # -- mutation cost vs the cold build it wraps ---------------------------
+    for n, deg in ((2_000, 8.0), (20_000, 8.0)):
+        g = erdos_renyi(n, deg, seed=1)
+        add = np.stack([rng.integers(0, n, delta),
+                        rng.integers(0, n, delta)], axis=1)
+        drop = g.edge_list()[rng.choice(g.m, delta, replace=False)]
+        mut_us = _time_us(lambda: g.with_edges(add=add, remove=drop), reps)
+        edges = g.edge_list()
+        build_us = _time_us(lambda: from_edges(n, edges), reps)
+        rows.append((f"streaming/mutate_n{n}_us", mut_us,
+                     f"delta={delta};rebuild_ratio="
+                     f"{mut_us / max(build_us, 1e-9):.2f}"))
+        rows.append((f"streaming/cold_build_n{n}_us", build_us, f"m={g.m}"))
+
+    # -- invalidation price: warm vs post-mutation vs re-warmed serve -------
+    g = erdos_renyi(3_000, 6.0, seed=2)
+    reg = GraphRegistry()
+    reg.register("t", g)
+    srv = HcPEServer(reg)
+    reqs = []
+    while len(reqs) < 40:
+        s, t = map(int, rng.choice(g.n, 2, replace=False))
+        reqs.append(PathQueryRequest(uid=len(reqs), s=s, t=t, k=4,
+                                     graph_id="t"))
+    srv.serve(reqs)                                       # warm the cache
+    warm_us = _time_us(lambda: srv.serve(reqs), 3)
+    reg.mutate("t", add=np.array([[0, 1]]))
+    t0 = time.perf_counter()
+    srv.serve(reqs)                                       # all misses
+    cold_us = (time.perf_counter() - t0) * 1e6
+    rewarm_us = _time_us(lambda: srv.serve(reqs), 3)
+    rows.append(("streaming/warm_serve_us", warm_us, "40 queries"))
+    rows.append(("streaming/post_mutation_serve_us", cold_us,
+                 f"invalidation_ratio={cold_us / max(warm_us, 1e-9):.1f}"))
+    rows.append(("streaming/rewarmed_serve_us", rewarm_us, "40 queries"))
+
+    # -- observation cost on a many-tenant server ---------------------------
+    reg2 = GraphRegistry()
+    srv2 = HcPEServer(reg2)
+    for i in range(16):
+        gi = erdos_renyi(300, 4.0, seed=10 + i)
+        reg2.register(f"tenant_{i:02d}", gi, cache_quota=8)
+        qs = [PathQueryRequest(uid=j, s=j, t=j + 5, k=3,
+                               graph_id=f"tenant_{i:02d}") for j in range(6)]
+        srv2.serve(qs)
+    snap_us = _time_us(lambda: snapshot(srv2), 50)
+    snap = snapshot(srv2)
+    json_us = _time_us(snap.to_json, 50)
+    prom_us = _time_us(snap.to_prometheus, 50)
+    rows.append(("streaming/snapshot_us", snap_us, "16 tenants"))
+    rows.append(("streaming/snapshot_to_json_us", json_us,
+                 f"bytes={len(snap.to_json())}"))
+    rows.append(("streaming/snapshot_to_prometheus_us", prom_us,
+                 f"lines={len(snap.to_prometheus().splitlines())}"))
+    assert snap.violations() == []
+    return rows

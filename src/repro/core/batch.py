@@ -9,12 +9,14 @@ those sharing levers to the PathEnum pipeline:
   1. **result dedup** — identical ``(s, t, k)`` queries in a batch run the
      pipeline once; duplicates receive the same ``EnumResult`` object.
   2. **index cache** — ``LightweightIndex`` builds are cached in an LRU
-     keyed on ``(graph_id, s, t, k, edge_mask_hash)`` that persists across
-     batches, so recurring queries (the hot s-t pairs of a production
-     workload) skip the build entirely.  Cache stats (hits / misses /
-     evictions) are first-class — globally and per tenant — so callers can
-     assert on reuse; per-tenant capacity quotas bound a noisy tenant's
-     cache footprint (DESIGN.md §8).
+     keyed on ``(graph_id, s, t, k, edge_mask_hash, graph_version)`` that
+     persists across batches, so recurring queries (the hot s-t pairs of a
+     production workload) skip the build entirely.  Cache stats (hits /
+     misses / evictions) are first-class — globally and per tenant — so
+     callers can assert on reuse; per-tenant capacity quotas bound a noisy
+     tenant's cache footprint (DESIGN.md §8).  ``graph_version`` is the
+     streaming-mutation epoch (DESIGN.md §12): a mutated graph's queries
+     key to fresh entries, so a pre-mutation index can never serve them.
   3. **stacked BFS** — the two bounded-BFS distance passes of every
      cache-missing query are stacked into one (Q, n) frontier matrix and
      relaxed together: one ``minimum.reduceat`` over the CSR per hop
@@ -48,19 +50,25 @@ from .planner import DEFAULT_TAU, Plan
 # (DESIGN.md §8): one engine — and therefore one LRU — serves many tenant
 # graphs, and the id keeps their entries (and stats, and eviction
 # pressure) apart.  Single-graph callers never see it: every entry point
-# defaults to ``DEFAULT_GRAPH_ID``.
-QueryKey = Tuple[str, int, int, int, int]  # (graph_id, s, t, k, edge_mask_hash)
+# defaults to ``DEFAULT_GRAPH_ID``.  ``graph_version`` is the tenant
+# graph's streaming-mutation epoch (DESIGN.md §12): mutating a graph bumps
+# it, so every post-mutation lookup misses the pre-mutation entries by
+# construction — correctness never depends on an eager purge.
+# (graph_id, s, t, k, edge_mask_hash, graph_version)
+QueryKey = Tuple[str, int, int, int, int, int]
 
 DEFAULT_GRAPH_ID = "default"
 
 
-def tenant_of(key: Union[QueryKey, Tuple[int, int, int, int]]) -> str:
+def tenant_of(key: Union[QueryKey, Tuple[int, ...]]) -> str:
     """The tenant a cache key belongs to.
 
-    5-tuple ``QueryKey``s carry their ``graph_id`` first; legacy 4-tuple
-    ``(s, t, k, edge_mask_hash)`` keys (pre-tenancy callers poking the
-    cache directly) fold onto ``DEFAULT_GRAPH_ID`` (DESIGN.md §8's
-    single-graph compatibility contract).
+    ``QueryKey``s carry their ``graph_id`` first (6-tuples since the
+    streaming ``graph_version`` dimension, 5-tuples before it — both
+    fold the same way); legacy all-int ``(s, t, k, edge_mask_hash)``
+    keys (pre-tenancy callers poking the cache directly) fold onto
+    ``DEFAULT_GRAPH_ID`` (DESIGN.md §8's single-graph compatibility
+    contract).
     """
     if isinstance(key, tuple) and key and isinstance(key[0], str):
         return key[0]
@@ -106,8 +114,10 @@ class CacheStats:
 
 class IndexCache:
     """Tenant-aware LRU over ``LightweightIndex`` keyed on ``QueryKey``
-    (``(graph_id, s, t, k, edge_mask_hash)``; legacy 4-tuple keys fold onto
-    ``DEFAULT_GRAPH_ID`` via ``tenant_of``).  DESIGN.md §4 and §8.
+    (``(graph_id, s, t, k, edge_mask_hash, graph_version)``; legacy
+    all-int 4-tuple keys fold onto ``DEFAULT_GRAPH_ID`` via
+    ``tenant_of``).  DESIGN.md §4, §8 and — for the ``graph_version``
+    dimension — §12.
 
     A hit moves the entry to the MRU slot; inserting past ``capacity``
     evicts the global LRU entry.  On top of the global bound, each tenant
@@ -148,6 +158,16 @@ class IndexCache:
         seen); the same mutable object is returned across calls, so
         ``snapshot``/``delta`` arithmetic works per tenant too."""
         return self._tenant_stats.setdefault(graph_id, CacheStats())
+
+    def tenant_ids(self) -> Tuple[str, ...]:
+        """Every tenant the cache knows about — ids holding live entries
+        plus ids with historical stats (a retired tenant's counters
+        survive ``drop_tenant`` for post-mortems, DESIGN.md §8).  This is
+        the iteration surface of the metrics control plane
+        (serving/metrics.py, DESIGN.md §12)."""
+        ids = dict.fromkeys(self._tenant_keys)
+        ids.update(dict.fromkeys(self._tenant_stats))
+        return tuple(ids)
 
     def quota_for(self, graph_id: str) -> Optional[int]:
         """The tenant's entry quota, or None when only the global
@@ -452,8 +472,12 @@ class BatchPathEnum:
         for key in keys:
             if key in resolved:
                 # duplicate occurrence shares the resolved (or in-flight)
-                # build — that's a cache hit: no rebuild happens for it
+                # build — that's a cache hit: no rebuild happens for it.
+                # The tenant counter moves with the global one, or
+                # per-tenant stats drift from the global delta
+                # (BatchServeReport.tenant_cache under-reports)
                 self.cache.stats.hits += 1
+                self.cache.stats_for(tenant_of(key)).hits += 1
                 continue
             idx = self.cache.get(key)
             if idx is not None:
@@ -473,19 +497,24 @@ class BatchPathEnum:
         if unmasked:
             t0 = time.perf_counter()
             stacked = batched_index_distances(
-                graph, [(s, t, k) for (_, s, t, k, _) in unmasked],
+                graph, [(s, t, k) for (_, s, t, k, _, _) in unmasked],
                 block=self.bfs_block)
             timing.distance_seconds += time.perf_counter() - t0
             dists.update(dict(zip(unmasked, stacked)))
 
         for key in missing:
-            _, s, t, k, _mh = key
+            _, s, t, k, _mh, _gv = key
             t0 = time.perf_counter()
             if key in dists:
+                # the mask still threads through: build_index must filter
+                # the edge set even when the distances are precomputed,
+                # or masked-out edges leak into the index (the distances
+                # themselves are the caller's contract — computed on the
+                # same filtered graph)
                 d_s, d_t = dists[key]
                 idx = build_index(graph, s, t, k,
                                   dist_fn=lambda *_a, _d=(d_s, d_t): _d,
-                                  edge_mask=None)
+                                  edge_mask=edge_mask)
             else:  # masked query — BFS must run on the filtered graph
                 idx = build_index(graph, s, t, k, edge_mask=edge_mask)
             timing.index_seconds += time.perf_counter() - t0
@@ -547,7 +576,11 @@ class BatchPathEnum:
 
         ``_precomputed_distances`` is the distributed hand-off: the mesh BFS
         of distributed/engine.py injects (dist_s, dist_t) per key so the
-        host build skips its own distance passes.
+        host build skips its own distance passes.  Keys are full
+        ``QueryKey`` tuples — including ``edge_mask_hash`` and
+        ``graph.version`` — and for masked keys the distances must have
+        been computed on the same filtered graph (the mask still filters
+        the index build; only the BFS is skipped).
         """
         t_batch = time.perf_counter()
         timing = BatchTiming()
@@ -558,7 +591,8 @@ class BatchPathEnum:
             if s == t:
                 raise ValueError("s and t must be distinct")
         mh = edge_mask_hash(edge_mask)
-        keys = [(graph_id, int(s), int(t), int(k), mh)
+        gv = int(graph.version)
+        keys = [(graph_id, int(s), int(t), int(k), mh, gv)
                 for (s, t, k) in queries]
 
         resolved = self._indexes_for(graph, keys, edge_mask,

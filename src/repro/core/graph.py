@@ -6,10 +6,20 @@ are host numpy; ``DeviceGraph`` mirrors them as jnp arrays for the jitted /
 distributed paths.  Distances are bounded by the hop constraint ``k`` so the
 sentinel ``INF_DIST`` is any value > k; we use 0x3FFF_FFFF to stay addition-
 safe in int32.
+
+Graphs are immutable values, but deployments stream (DESIGN.md §12): a
+fraud graph ingests live transactions between queries.  Mutation is
+therefore *versioned copying* — ``with_edges`` (and the ``add_edges`` /
+``remove_edges`` conveniences) rebuild the CSR around the new edge set
+and return a new ``Graph`` whose monotone ``version`` is bumped by one.
+Every index-cache key derived from a graph folds the version in
+(core/batch.py), so an index built against version v can never answer a
+query against version v+1 — the streaming invalidation contract.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -19,7 +29,15 @@ PAD = np.int32(-1)
 
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """Directed graph in CSR (forward + reverse) with flat edge lists."""
+    """Directed graph in CSR (forward + reverse) with flat edge lists.
+
+    ``version`` is the streaming-mutation epoch (DESIGN.md §12): 0 for a
+    freshly built graph, and bumped by one on every ``with_edges`` /
+    ``add_edges`` / ``remove_edges`` copy.  It is monotone per mutation
+    *lineage* — the engine folds it into every index-cache key, so
+    pre-mutation indexes are unreachable the instant a mutated copy
+    starts serving.
+    """
 
     n: int
     # forward CSR
@@ -31,6 +49,8 @@ class Graph:
     # flat edge list (same order as forward CSR)
     esrc: np.ndarray      # (m,) int32
     edst: np.ndarray      # (m,) int32
+    # streaming-mutation epoch (DESIGN.md §12); part of the cache key
+    version: int = 0
 
     @property
     def m(self) -> int:
@@ -55,6 +75,64 @@ class Graph:
 
     def redst(self) -> np.ndarray:
         return self.rindices
+
+    # -- streaming mutation (DESIGN.md §12) ---------------------------------
+
+    def edge_list(self) -> np.ndarray:
+        """The edge set as an (m, 2) int64 array in forward-CSR order."""
+        return np.stack([self.esrc.astype(np.int64),
+                         self.edst.astype(np.int64)], axis=1)
+
+    def with_edges(self, add: Optional[np.ndarray] = None,
+                   remove: Optional[np.ndarray] = None) -> "Graph":
+        """Versioned copy with ``add`` edges inserted and ``remove``
+        edges deleted (DESIGN.md §12).
+
+        Both arguments are (r, 2) arrays of directed ``(src, dst)``
+        pairs; endpoints must lie in [0, n).  Removals run first, then
+        insertions, so passing the same edge in both re-inserts it.
+        Removing an edge the graph does not hold raises ValueError (a
+        streaming feed out of sync with its graph is a bug worth
+        catching, not masking); inserting an edge that already exists is
+        a no-op (the edge relation is a set, like ``from_edges``), and
+        self-loops are dropped as everywhere else.  The copy's
+        ``version`` is ``self.version + 1`` even when the edge set ends
+        up unchanged — callers observing the version see every mutation.
+        """
+        edges = self.edge_list()
+        if remove is not None:
+            rem = np.asarray(remove, dtype=np.int64).reshape(-1, 2)
+            self._check_range(rem, "remove")
+            if rem.size:
+                cur_keys = edges[:, 0] * self.n + edges[:, 1]
+                rem_keys = rem[:, 0] * self.n + rem[:, 1]
+                present = np.isin(rem_keys, cur_keys)
+                if not present.all():
+                    missing = rem[~present][0]
+                    raise ValueError(
+                        f"cannot remove edge ({int(missing[0])}, "
+                        f"{int(missing[1])}): not in the graph")
+                edges = edges[~np.isin(cur_keys, rem_keys)]
+        if add is not None:
+            ins = np.asarray(add, dtype=np.int64).reshape(-1, 2)
+            self._check_range(ins, "add")
+            edges = np.concatenate([edges, ins], axis=0)
+        rebuilt = from_edges(self.n, edges)
+        return dataclasses.replace(rebuilt, version=self.version + 1)
+
+    def add_edges(self, edges: np.ndarray) -> "Graph":
+        """``with_edges(add=edges)`` — the streaming-insert convenience."""
+        return self.with_edges(add=edges)
+
+    def remove_edges(self, edges: np.ndarray) -> "Graph":
+        """``with_edges(remove=edges)`` — the streaming-delete
+        convenience; every edge must currently exist."""
+        return self.with_edges(remove=edges)
+
+    def _check_range(self, pairs: np.ndarray, what: str) -> None:
+        if pairs.size and not ((pairs >= 0).all() and (pairs < self.n).all()):
+            raise ValueError(f"{what} edges must have endpoints in "
+                             f"[0, {self.n})")
 
 
 def from_edges(n: int, edges: np.ndarray, dedup: bool = True) -> Graph:

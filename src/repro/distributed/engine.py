@@ -202,8 +202,8 @@ class DistributedPathEnum:
         padded = np.concatenate([q, np.repeat(q[:1], pad, axis=0)]) \
             if pad else q
         _, _, _, (ds, dt) = self.query_batch_stats(padded)
-        pre = {(graph_id, s, t, k, 0): (ds[i].astype(np.int32),
-                                        dt[i].astype(np.int32))
+        pre = {(graph_id, s, t, k, 0, self.graph.version):
+               (ds[i].astype(np.int32), dt[i].astype(np.int32))
                for i, (s, t, k) in enumerate(triples)}
         return engine.run(self.graph, triples, count_only=count_only,
                           first_n=first_n, graph_id=graph_id,

@@ -51,11 +51,15 @@ import dataclasses
 import itertools
 import math
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 from typing import Union
 
+if TYPE_CHECKING:  # deferred: metrics imports this module at runtime
+    from .metrics import MetricsSnapshot
+
 from ..core.batch import BatchOutput, BatchPathEnum, DEFAULT_GRAPH_ID
+from ..core.enumerate import EnumStats
 from ..core.graph import Graph
 from ..core.rank import ORDERS
 from .hcpe import (BatchServeReport, PathQueryRequest, PathQueryResponse,
@@ -70,7 +74,28 @@ from .registry import GraphRegistry
 @dataclasses.dataclass
 class AsyncServeStats:
     """Counters over the server's lifetime (admission + SLO outcomes;
-    DESIGN.md §7, tenancy §8)."""
+    DESIGN.md §7, tenancy §8, metrics §12).
+
+    Two exact identities hold at every instant, and the metrics control
+    plane exports and re-checks them
+    (serving/metrics.MetricsSnapshot.violations, DESIGN.md §12):
+
+      * **admission**: ``submitted == accepted + rejected_total`` —
+        ``submit`` bumps ``submitted`` and exactly one of ``accepted`` /
+        ``rejected_*`` before it returns or parks.  The ``rejected_*``
+        counters are admission-time only.
+      * **settlement**: ``accepted == completed + rejected_mid_flight +
+        cancelled + failed + inflight`` — every admitted request ends in
+        exactly one bucket: a served response, a dispatch-time rejection
+        (tenant retired / weights dropped between admission and
+        dispatch; the response still carries the ``STATUS_REJECTED_*``
+        status), a caller-cancelled future, an engine-raised exception,
+        or it is still in flight (``AsyncHcPEServer.queue_depth``).
+
+    The ``*_ms_total`` fields accumulate the queue/service/total latency
+    split over completed responses (``completed`` is their shared
+    denominator), so an exporter can derive lifetime means without
+    retaining per-response data."""
     submitted: int = 0
     accepted: int = 0
     completed: int = 0
@@ -80,9 +105,26 @@ class AsyncServeStats:
     rejected_unknown_graph: int = 0
     rejected_shutdown: int = 0
     rejected_no_weights: int = 0
+    rejected_mid_flight: int = 0   # accepted, then shed at dispatch
+    cancelled: int = 0             # accepted, future cancelled by caller
+    failed: int = 0                # accepted, engine raised
     micro_batches: int = 0
     slo_met: int = 0
     slo_missed: int = 0
+    # completed-response latency split, accumulated (ms); mean = /completed
+    queue_ms_total: float = 0.0
+    service_ms_total: float = 0.0
+    total_ms_total: float = 0.0
+
+    @property
+    def rejected_total(self) -> int:
+        """Sum of the admission-time rejection counters — the shed side
+        of ``submitted == accepted + rejected_total``
+        (``rejected_mid_flight`` is a settlement bucket, not an
+        admission one, and is deliberately excluded)."""
+        return (self.rejected_queue_full + self.rejected_quota
+                + self.rejected_tenant_quota + self.rejected_unknown_graph
+                + self.rejected_shutdown + self.rejected_no_weights)
 
 
 @dataclasses.dataclass
@@ -182,7 +224,13 @@ class AsyncHcPEServer:
         # micro-batch forever — past capacity the oldest outputs fall off
         self._outputs: Deque[BatchOutput] = collections.deque(
             maxlen=report_capacity)
+        # lifetime Fig.-6 counters: every micro-batch's enum_stats merged
+        # as it completes — unlike _outputs this never drains or caps, so
+        # the metrics control plane (serving/metrics.py, DESIGN.md §12)
+        # exports engine work since server construction
+        self.enum_totals = EnumStats()
         self._wakeup: Optional[asyncio.Event] = None
+        self._stop_evt: Optional[asyncio.Event] = None
         self._task: Optional[asyncio.Task] = None
         self._closing = False
 
@@ -194,16 +242,21 @@ class AsyncHcPEServer:
             raise RuntimeError("server already started")
         self._closing = False
         self._wakeup = asyncio.Event()
+        self._stop_evt = asyncio.Event()
         self._task = asyncio.create_task(self._scheduler())
 
     async def stop(self) -> None:
         """Drain the queue (every admitted request gets its response),
         then stop the scheduler.  Submissions after stop() begins resolve
-        to STATUS_REJECTED_SHUTDOWN."""
+        to STATUS_REJECTED_SHUTDOWN.  Drain latency is service-bound, not
+        window-bound: the scheduler's batching window is interrupted (and
+        skipped for later rounds) the moment stop() is called — there is
+        nothing left to accumulate for once admissions are shut."""
         if self._task is None:
             return
         self._closing = True
         self._wakeup.set()
+        self._stop_evt.set()
         await self._task
         self._task = None
 
@@ -220,6 +273,21 @@ class AsyncHcPEServer:
     def queue_depth(self) -> int:
         """Requests admitted whose responses have not been sent yet."""
         return self._inflight
+
+    def inflight_by_graph(self) -> Dict[str, int]:
+        """Per-tenant admitted-but-unanswered request counts — the live
+        numerator of each tenant's ``max_pending`` quota, exported by the
+        metrics control plane (DESIGN.md §12)."""
+        return dict(self._per_graph)
+
+    def metrics_snapshot(self) -> "MetricsSnapshot":
+        """One consistent ``serving.metrics.MetricsSnapshot`` of this
+        server: admission/SLO/latency counters, per-tenant cache and
+        quota state, graph versions, and lifetime Fig.-6 enumeration
+        totals (DESIGN.md §12).  Safe to call at any point in the
+        server's lifecycle (counters are read, never reset)."""
+        from .metrics import snapshot
+        return snapshot(self)
 
     @property
     def graph(self) -> Optional[Graph]:
@@ -367,10 +435,17 @@ class AsyncHcPEServer:
                 self._wakeup.clear()
                 await self._wakeup.wait()
                 continue
-            if self.batch_window_ms > 0:
+            if self.batch_window_ms > 0 and not self._closing:
                 # let the micro-batch fill; new arrivals during the window
-                # (and during service below) join the EDF sort next round
-                await asyncio.sleep(self.batch_window_ms / 1e3)
+                # (and during service below) join the EDF sort next round.
+                # The wait is interruptible: stop() sets _stop_evt, so a
+                # drain never sits out the rest of a batching window — no
+                # new admissions can arrive to fill it anyway
+                try:
+                    await asyncio.wait_for(self._stop_evt.wait(),
+                                           self.batch_window_ms / 1e3)
+                except asyncio.TimeoutError:
+                    pass
             while self._pending:
                 await self._serve_group(self._pop_edf_group())
 
@@ -383,12 +458,11 @@ class AsyncHcPEServer:
         head = group[0].req
         count_only, first_n, order = head.count_only, head.first_n, head.order
         if head.graph_id not in self.registry:
-            for p in group:
-                if not p.future.done():
-                    self.stats.rejected_unknown_graph += 1
-                    p.future.set_result(self._rejected(
-                        p.req, STATUS_REJECTED_UNKNOWN_GRAPH))
-                self._settle(p)
+            # dispatch-time shed: these were *accepted*, so they settle
+            # as rejected_mid_flight — the admission rejected_* counters
+            # must keep submitted == accepted + rejected_total exact
+            self._reject_group_mid_flight(group,
+                                          STATUS_REJECTED_UNKNOWN_GRAPH)
             return
         graph = self.registry.get(head.graph_id)
         weights = None
@@ -397,12 +471,8 @@ class AsyncHcPEServer:
             if weights is None:
                 # tenant re-registered without weights between admission
                 # and dispatch: fail soft, like a retired tenant
-                for p in group:
-                    if not p.future.done():
-                        self.stats.rejected_no_weights += 1
-                        p.future.set_result(self._rejected(
-                            p.req, STATUS_REJECTED_NO_WEIGHTS))
-                    self._settle(p)
+                self._reject_group_mid_flight(group,
+                                              STATUS_REJECTED_NO_WEIGHTS)
                 return
         deadline = None
         if self.enforce_deadlines:
@@ -421,12 +491,17 @@ class AsyncHcPEServer:
             for p in group:
                 if not p.future.done():
                     p.future.set_exception(exc)
+                    self.stats.failed += 1
+                else:
+                    self.stats.cancelled += 1
                 self._settle(p)
             return
         done = time.perf_counter()
         self._outputs.append(out)
+        self.enum_totals.merge(out.enum_stats)
         for p, item in zip(group, out.items):
             if p.future.done():      # submit cancelled (e.g. wait_for timeout)
+                self.stats.cancelled += 1
                 self._settle(p)      # — drop the response, keep the scheduler
                 continue
             resp = response_from_item(p.req, item)
@@ -440,7 +515,25 @@ class AsyncHcPEServer:
                 else:
                     self.stats.slo_missed += 1
             self.stats.completed += 1
+            self.stats.queue_ms_total += resp.queue_ms
+            self.stats.service_ms_total += resp.service_ms
+            self.stats.total_ms_total += resp.total_ms
             p.future.set_result(resp)
+            self._settle(p)
+
+    def _reject_group_mid_flight(self, group: List[_Pending],
+                                 status: str) -> None:
+        """Settle a whole micro-batch as dispatch-time rejections (tenant
+        retired / weights dropped between admission and dispatch): every
+        live future resolves to a ``status`` rejection response counted
+        under ``rejected_mid_flight``; already-cancelled futures settle
+        under ``cancelled``."""
+        for p in group:
+            if not p.future.done():
+                self.stats.rejected_mid_flight += 1
+                p.future.set_result(self._rejected(p.req, status))
+            else:
+                self.stats.cancelled += 1
             self._settle(p)
 
     def _settle(self, p: _Pending) -> None:

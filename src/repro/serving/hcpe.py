@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING, Union
 
 import numpy as np
 
@@ -25,6 +25,9 @@ from ..core.batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
 from ..core.enumerate import EnumStats
 from ..core.graph import Graph
 from .registry import GraphRegistry
+
+if TYPE_CHECKING:  # deferred: metrics imports this module at runtime
+    from .metrics import MetricsSnapshot
 
 
 # Response statuses.  Rejections are *responses*, not exceptions: an
@@ -243,6 +246,18 @@ class HcPEServer:
         # the knob there instead.
         self.engine = engine or BatchPathEnum(backend=backend)
         self.registry.bind_engine(self.engine)
+        # lifetime Fig.-6 counters across serve() calls, feeding the
+        # metrics control plane (serving/metrics.py, DESIGN.md §12)
+        self.enum_totals = EnumStats()
+
+    def metrics_snapshot(self) -> "MetricsSnapshot":
+        """One consistent ``serving.metrics.MetricsSnapshot`` of this
+        server: per-tenant cache and quota state, graph versions, and
+        lifetime Fig.-6 enumeration totals (DESIGN.md §12).  The sync
+        server has no admission control, so the snapshot's ``serve``
+        block is absent (None)."""
+        from .metrics import snapshot
+        return snapshot(self)
 
     @property
     def graph(self) -> Optional[Graph]:
@@ -281,6 +296,7 @@ class HcPEServer:
                                   graph_id=graph_id, order=order,
                                   weights=weights)
             outputs.append(out)
+            self.enum_totals.merge(out.enum_stats)
             for p, item in zip(positions, out.items):
                 resp = response_from_item(requests[p], item)
                 resp.service_ms = resp.total_ms = resp.latency_ms

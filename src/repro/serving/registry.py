@@ -13,7 +13,17 @@ which ``graph_id``s exist:
   * **per-tenant knobs** — each entry may carry an index-cache entry
     quota (``cache_quota``, enforced by ``core.batch.IndexCache``) and an
     in-flight request quota (``max_pending``, enforced at admission by
-    ``AsyncHcPEServer``).
+    ``AsyncHcPEServer``); both are adjustable live through
+    ``set_cache_quota`` / ``set_max_pending`` (the metrics control
+    plane's write path, DESIGN.md §12).
+  * **streaming mutation** — ``mutate`` applies incremental edge
+    inserts/deletes to a tenant's graph (``Graph.with_edges``, which
+    bumps the monotone ``Graph.version`` folded into every cache key)
+    and purges the tenant's now-stale cache entries from every bound
+    engine; ``register`` over an existing id is the hot-swap path
+    (register v2 → drain v1 traffic → the old graph object simply drops
+    out of scope).  Either way a pre-mutation index can never answer a
+    post-mutation query (DESIGN.md §12).
   * **single-graph compatibility** — ``GraphRegistry.wrap(graph)`` puts a
     bare graph under ``DEFAULT_GRAPH_ID``; both servers accept either a
     ``Graph`` or a registry, so every pre-tenancy call site runs
@@ -22,7 +32,8 @@ which ``graph_id``s exist:
 The registry is deliberately host-local and synchronous: it names graphs
 and owns their quotas, nothing else.  Scheduling lives in the servers,
 caching in the engine; the sharded (cross-host) cache on the ROADMAP will
-consistent-hash on the same ``(graph_id, s, t, k, edge_mask_hash)`` keys.
+consistent-hash on the same ``(graph_id, s, t, k, edge_mask_hash,
+graph_version)`` keys.
 """
 from __future__ import annotations
 
@@ -117,6 +128,71 @@ class GraphRegistry:
         with ``STATUS_REJECTED_UNKNOWN_GRAPH``."""
         entry = self._entries.pop(graph_id)
         self._drop_from_engines(graph_id)
+        return entry
+
+    def mutate(self, graph_id: str, *,
+               add: Optional[np.ndarray] = None,
+               remove: Optional[np.ndarray] = None,
+               edge_weights: Optional[np.ndarray] = None) -> TenantEntry:
+        """Stream edge inserts/deletes into one tenant's graph
+        (DESIGN.md §12).
+
+        Applies ``Graph.with_edges(add=..., remove=...)`` — the copy's
+        ``version`` bump makes every pre-mutation cache entry
+        unreachable — then purges the tenant's stale entries from every
+        bound engine (the version guarantees correctness; the purge
+        returns the capacity).  Quotas survive unchanged.  A tenant
+        registered with ``edge_weights`` must supply the new per-edge
+        weights here (the edge set changed, so the old vector no longer
+        lines up); weightless tenants may also supply weights to become
+        weight-servable.  Returns the updated entry; its
+        ``entry.graph.version`` is the new epoch.
+        """
+        entry = self._entries[graph_id]
+        new_graph = entry.graph.with_edges(add=add, remove=remove)
+        if entry.edge_weights is not None and edge_weights is None:
+            raise ValueError(
+                f"tenant {graph_id!r} serves order='weight': mutate() "
+                f"needs the new edge_weights (one per edge of the "
+                f"mutated graph)")
+        if edge_weights is not None:
+            edge_weights = np.asarray(edge_weights, dtype=np.float64)
+            if edge_weights.shape != (new_graph.m,):
+                raise ValueError(
+                    f"edge_weights must have shape ({new_graph.m},) for "
+                    f"the mutated graph, got {edge_weights.shape}")
+        entry = dataclasses.replace(entry, graph=new_graph,
+                                    edge_weights=edge_weights)
+        self._entries[graph_id] = entry
+        self._drop_from_engines(graph_id)
+        for engine in self._engines:
+            engine.cache.set_quota(graph_id, entry.cache_quota)
+        return entry
+
+    def set_cache_quota(self, graph_id: str,
+                        quota: Optional[int]) -> TenantEntry:
+        """Adjust one tenant's index-cache entry quota live (the metrics
+        control plane's write path, DESIGN.md §12).  Pushes to every
+        bound engine immediately — a tenant over the new quota sheds its
+        LRU entries now — and updates the registry entry so later-bound
+        engines inherit it.  ``None`` removes the bound."""
+        entry = dataclasses.replace(self._entries[graph_id],
+                                    cache_quota=quota)
+        self._entries[graph_id] = entry
+        for engine in self._engines:
+            engine.cache.set_quota(graph_id, quota)
+        return entry
+
+    def set_max_pending(self, graph_id: str,
+                        max_pending: Optional[int]) -> TenantEntry:
+        """Adjust one tenant's in-flight admission quota live
+        (DESIGN.md §12).  The async front-end reads the entry at every
+        admission, so the new bound applies to the next ``submit``;
+        already-admitted requests are never shed retroactively.  ``None``
+        falls back to the server-wide default."""
+        entry = dataclasses.replace(self._entries[graph_id],
+                                    max_pending=max_pending)
+        self._entries[graph_id] = entry
         return entry
 
     def _drop_from_engines(self, graph_id: str) -> None:

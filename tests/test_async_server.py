@@ -149,6 +149,30 @@ def test_shutdown_rejects_new_but_drains_admitted():
     assert late.status == STATUS_REJECTED_SHUTDOWN
 
 
+def test_stop_drains_without_waiting_out_the_batch_window():
+    """Regression: the scheduler used to sleep the full ``batch_window_ms``
+    between drain batches even while closing, so shutdown latency scaled
+    with the window instead of the service time.  With a multi-second
+    window, stop() must still complete in a service-bound instant."""
+    g = erdos_renyi(40, 3.0, seed=5)
+
+    async def drive():
+        srv = AsyncHcPEServer(g, batch_window_ms=5_000.0)
+        await srv.start()
+        futs = [asyncio.ensure_future(
+            srv.submit(PathQueryRequest(uid=i, s=i, t=i + 3, k=3)))
+            for i in range(4)]
+        await asyncio.sleep(0.005)           # admitted; scheduler in window
+        t0 = time.perf_counter()
+        await srv.stop()                     # must interrupt the window
+        drained_ms = (time.perf_counter() - t0) * 1e3
+        return await asyncio.gather(*futs), drained_ms
+
+    resps, drained_ms = asyncio.run(drive())
+    assert all(r.status == STATUS_OK for r in resps)
+    assert drained_ms < 1_000.0              # far below the 5 s window
+
+
 def test_malformed_queries_raise_not_reject():
     """Malformed queries must fail their own submit (and never reach the
     engine, where they would poison every co-batched request)."""

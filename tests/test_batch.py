@@ -491,3 +491,67 @@ def test_batch_serve_report_surfaces_chunks():
         srv.engine.run(g, [(0, 1, 4)], count_only=False),
         srv.engine.run(g, [(2, 3, 4)], count_only=True)]]
     assert srv_report.chunks == sum(per_group) > 0
+
+
+# ---------------------------------------------------------------------------
+# streaming-era regressions (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def test_duplicate_hits_land_in_tenant_stats_too():
+    """Regression (tenant-stat drift): a duplicate-inside-the-batch cache
+    hit used to bump only the global counter, so per-tenant hit rates
+    drifted low on duplicate-heavy traffic.  The global delta must equal
+    the sum of tenant deltas, hit for hit."""
+    g_a = erdos_renyi(40, 4.0, seed=1)
+    g_b = erdos_renyi(40, 4.0, seed=2)
+    eng = BatchPathEnum()
+    # 3 distinct queries, each submitted 3x in one batch, on two tenants
+    distinct = [(0, 1, 3), (2, 3, 4), (4, 5, 3)]
+    queries = distinct * 3
+    before = eng.cache.stats.snapshot()
+    before_t = {gid: eng.cache.stats_for(gid).snapshot()
+                for gid in ("a", "b")}
+    eng.run(g_a, queries, graph_id="a")
+    eng.run(g_b, queries, graph_id="b")
+    delta = eng.cache.stats.delta(before)
+    deltas = {gid: eng.cache.stats_for(gid).delta(before_t[gid])
+              for gid in ("a", "b")}
+    # each tenant: 3 misses (first occurrence) + 6 duplicate hits
+    for gid in ("a", "b"):
+        assert (deltas[gid].hits, deltas[gid].misses) == (6, 3), gid
+    assert delta.hits == sum(d.hits for d in deltas.values())
+    assert delta.misses == sum(d.misses for d in deltas.values())
+
+
+def test_masked_precomputed_distances_keep_the_mask():
+    """Regression (masked precomputed-index leak): a masked query whose
+    key sits in ``_precomputed_distances`` used to build its index with
+    ``edge_mask=None``, silently enumerating masked-out edges.  The
+    precomputed path must match the non-precomputed masked run and the
+    sequential masked count exactly."""
+    from repro.core import DEFAULT_GRAPH_ID
+    from repro.core.batch import edge_mask_hash
+
+    g = erdos_renyi(50, 4.0, seed=12)
+    rng = np.random.default_rng(5)
+    mask = np.ones(g.m, dtype=bool)
+    mask[rng.choice(g.m, g.m // 2, replace=False)] = False
+    queries = _random_queries(g, 6, rng, kmin=3, kmax=5)
+
+    mh = edge_mask_hash(mask)
+    pre = {}
+    for (s, t, k) in queries:
+        idx = build_index(g, s, t, k, edge_mask=mask)  # mask-true distances
+        pre[(DEFAULT_GRAPH_ID, s, t, k, mh, g.version)] = \
+            (idx.dist_s, idx.dist_t)
+
+    got = BatchPathEnum().run(g, queries, edge_mask=mask,
+                              _precomputed_distances=pre)
+    want = BatchPathEnum().run(g, queries, edge_mask=mask)
+    assert got.counts.tolist() == want.counts.tolist()
+    seq = PathEnum()
+    assert got.counts.tolist() == [seq.count(g, s, t, k, edge_mask=mask)
+                                   for (s, t, k) in queries]
+    # the unmasked counts differ somewhere, or the mask proved nothing
+    free = BatchPathEnum().run(g, queries)
+    assert free.counts.tolist() != got.counts.tolist()

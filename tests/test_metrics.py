@@ -1,0 +1,296 @@
+"""Metrics control plane: snapshots bit-match the live counters they copy.
+
+Three layers (DESIGN.md §12): exactness — every number in a
+``MetricsSnapshot`` equals the engine/server counter it was copied from,
+and stays equal after more traffic (value copies, not references);
+export — ``to_json`` and ``to_prometheus`` round-trip the same numbers;
+invariants — ``violations()`` is empty on a healthy stack (a fuzzed
+async property test drives mixed accept/reject/deadline traffic through
+it) and non-empty when a counter identity is deliberately broken.
+"""
+import asyncio
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import BatchPathEnum, erdos_renyi
+from repro.core.batch import CacheStats
+from repro.core.enumerate import EnumStats
+from repro.serving import (AsyncHcPEServer, GraphRegistry, HcPEServer,
+                           MetricsSnapshot, PathQueryRequest, STATUS_OK,
+                           snapshot)
+
+
+def _requests(g, count, rng, graph_id, uid0=0, dup_every=3, **kw):
+    reqs = []
+    while len(reqs) < count:
+        s, t = map(int, rng.choice(g.n, 2, replace=False))
+        if reqs and len(reqs) % dup_every == 0:
+            s, t = reqs[0].s, reqs[0].t        # force in-batch duplicates
+        reqs.append(PathQueryRequest(uid=uid0 + len(reqs), s=s, t=t,
+                                     k=int(rng.integers(2, 5)),
+                                     graph_id=graph_id, **kw))
+    return reqs
+
+
+def _two_tenant_server():
+    rng = np.random.default_rng(0)
+    reg = GraphRegistry()
+    reg.register("a", erdos_renyi(40, 3.0, seed=1), cache_quota=8)
+    reg.register("b", erdos_renyi(50, 4.0, seed=2))
+    srv = HcPEServer(reg)
+    for gid in ("a", "b"):
+        g = reg.get(gid)
+        srv.serve(_requests(g, 9, rng, gid))
+        srv.serve(_requests(g, 9, rng, gid))   # second wave: warm hits
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# exactness: the snapshot is the ground truth, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_sync_snapshot_bit_matches_engine_counters():
+    srv = _two_tenant_server()
+    cache = srv.engine.cache
+    snap = snapshot(srv)
+
+    assert snap.serve is None and snap.queue_depth == 0   # sync front-end
+    assert dataclasses.asdict(snap.cache) == dataclasses.asdict(cache.stats)
+    assert snap.cache_entries == len(cache)
+    assert snap.cache_capacity == cache.capacity
+    assert dataclasses.asdict(snap.enum_stats) == \
+        dataclasses.asdict(srv.enum_totals)
+    assert set(snap.tenants) == {"a", "b"}
+    for gid in ("a", "b"):
+        tm = snap.tenants[gid]
+        assert tm.registered
+        assert dataclasses.asdict(tm.cache) == \
+            dataclasses.asdict(cache.stats_for(gid))
+        assert tm.cache_entries == cache.tenant_len(gid)
+        assert tm.cache_quota == srv.registry.entry(gid).cache_quota
+        entry = srv.registry.entry(gid)
+        assert (tm.graph_version, tm.vertices, tm.edges) == \
+            (entry.graph.version, entry.graph.n, entry.graph.m)
+    assert snap.violations() == []
+
+
+def test_snapshot_is_a_value_copy_not_a_view():
+    srv = _two_tenant_server()
+    snap = snapshot(srv)
+    frozen = snap.to_dict()
+    # new traffic (cold tenant, fresh misses) must not retro-mutate snap
+    srv.registry.register("c", erdos_renyi(30, 3.0, seed=3))
+    srv.serve(_requests(srv.registry.get("c"), 6,
+                        np.random.default_rng(9), "c"))
+    assert snap.to_dict() == frozen
+    assert "c" not in snap.tenants
+    later = snapshot(srv)
+    assert "c" in later.tenants
+    assert later.cache.misses > snap.cache.misses
+
+
+def test_enum_totals_accumulate_across_serves():
+    """The server-lifetime Fig.-6 totals are the merge of every batch's
+    EnumStats — assert against independently re-served ground truth."""
+    rng = np.random.default_rng(4)
+    g = erdos_renyi(40, 3.0, seed=5)
+    srv = HcPEServer(g)
+    want = EnumStats()
+    for uid0 in (0, 100):
+        reqs = _requests(g, 7, rng, "default", uid0=uid0, count_only=False)
+        _, _ = srv.serve(reqs)
+        ref = BatchPathEnum().run(g, [(q.s, q.t, q.k) for q in reqs],
+                                  count_only=False)
+        want.merge(ref.enum_stats)
+    snap = snapshot(srv)
+    assert dataclasses.asdict(snap.enum_stats) == dataclasses.asdict(want)
+    assert snap.enum_stats.results > 0
+
+
+def test_retired_tenant_survives_as_unregistered_stats():
+    srv = _two_tenant_server()
+    misses_before = srv.engine.cache.stats_for("a").misses
+    srv.registry.retire("a")
+    snap = snapshot(srv)
+    tm = snap.tenants["a"]
+    assert not tm.registered and tm.graph_version == -1
+    assert tm.cache_entries == 0                  # entries purged at retire
+    assert tm.cache.misses == misses_before       # history kept (§8)
+    assert snap.violations() == []
+
+
+def test_async_snapshot_bit_matches_server_stats():
+    rng = np.random.default_rng(6)
+    reg = GraphRegistry()
+    g = erdos_renyi(50, 3.0, seed=7)
+    reg.register("live", g)
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=1.0) as srv:
+            reqs = _requests(g, 10, rng, "live", deadline_ms=500.0)
+            reqs.append(PathQueryRequest(uid=99, s=0, t=1, k=3,
+                                         graph_id="ghost"))
+            resps = await srv.serve(reqs)
+            return srv, snapshot(srv), resps
+
+    srv, snap, resps = asyncio.run(drive())
+    assert snap.serve is not None
+    assert dataclasses.asdict(snap.serve) == dataclasses.asdict(srv.stats)
+    assert snap.serve.submitted == 11
+    assert snap.serve.rejected_unknown_graph == 1
+    assert snap.serve.completed == \
+        sum(1 for r in resps if r.status == STATUS_OK)
+    assert snap.queue_depth == 0                  # drained before capture
+    assert snap.violations() == []
+    assert dataclasses.asdict(snap.enum_stats) == \
+        dataclasses.asdict(srv.enum_totals)
+
+
+# ---------------------------------------------------------------------------
+# export formats
+# ---------------------------------------------------------------------------
+
+def test_json_export_round_trips_to_dict():
+    srv = _two_tenant_server()
+    snap = snapshot(srv)
+    assert json.loads(snap.to_json()) == json.loads(
+        json.dumps(snap.to_dict()))
+    assert json.loads(snap.to_json(indent=2)) == json.loads(snap.to_json())
+    doc = json.loads(snap.to_json())
+    assert doc["cache"]["hits"] == srv.engine.cache.stats.hits
+    assert doc["tenants"]["a"]["cache"]["hits"] == \
+        srv.engine.cache.stats_for("a").hits
+
+
+def test_prometheus_export_shape_and_values():
+    srv = _two_tenant_server()
+    snap = snapshot(srv)
+    text = snap.to_prometheus()
+    assert text.endswith("\n")
+    lines = text.splitlines()
+    headers = [l for l in lines if l.startswith("# TYPE")]
+    assert len(headers) == len(set(headers))      # one TYPE header a family
+    assert f"pathenum_cache_hits_total {snap.cache.hits}" in lines
+    for gid in ("a", "b"):
+        want = snap.tenants[gid].cache.hits
+        assert (f'pathenum_tenant_cache_hits_total{{graph_id="{gid}"}} '
+                f"{want}") in lines
+    # "b" has no quota: no fake bound exported
+    assert not any('pathenum_tenant_cache_quota{graph_id="b"}' in l
+                   for l in lines)
+    assert any('pathenum_tenant_cache_quota{graph_id="a"} 8' == l
+               for l in lines)
+    # sync snapshot: no serve family at all
+    assert not any("pathenum_serve_" in l for l in lines)
+
+
+def test_prometheus_label_escaping():
+    snap = MetricsSnapshot(captured_at=0.0, cache=CacheStats(),
+                           cache_entries=0, cache_capacity=0,
+                           enum_stats=EnumStats(), tenants={})
+    lines = []
+    snap._sample(lines, "m", "gauge", 1, 'we"ird\\id\n')
+    assert lines[1] == 'm{graph_id="we\\"ird\\\\id\\n"} 1'
+
+
+# ---------------------------------------------------------------------------
+# invariants: violations() is empty on healthy stacks, loud on broken ones
+# ---------------------------------------------------------------------------
+
+def test_violations_catch_injected_tenant_drift():
+    srv = _two_tenant_server()
+    snap = snapshot(srv)
+    assert snap.violations() == []
+    snap.tenants["a"].cache.hits += 1             # re-introduce the drift bug
+    bad = snap.violations()
+    assert len(bad) == 1 and "hits" in bad[0]
+
+
+def test_violations_catch_broken_admission_identity():
+    rng = np.random.default_rng(8)
+    g = erdos_renyi(30, 3.0, seed=8)
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=0.0) as srv:
+            await srv.serve(_requests(g, 5, rng, "default"))
+            return snapshot(srv)
+
+    snap = asyncio.run(drive())
+    assert snap.violations() == []
+    snap.serve.accepted -= 1
+    assert any("admission" in v or "settlement" in v
+               for v in snap.violations())
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzzed_async_traffic_keeps_counter_identities(seed):
+    """The counter-consistency property: under mixed traffic — duplicate
+    queries, unknown tenants, per-tenant admission quotas, tight and
+    absent deadlines — the admission and settlement identities hold, the
+    SLO counters agree with the responses, and the snapshot reports no
+    violations."""
+    rng = np.random.default_rng(100 + seed)
+    reg = GraphRegistry()
+    graphs = {"a": erdos_renyi(30, 3.0, seed=seed),
+              "b": erdos_renyi(45, 4.0, seed=seed + 50)}
+    reg.register("a", graphs["a"], cache_quota=3, max_pending=2)
+    reg.register("b", graphs["b"])
+    gids = ["a", "b", "ghost"]
+
+    reqs = []
+    for uid in range(int(rng.integers(20, 40))):
+        gid = gids[int(rng.integers(0, 3))]
+        g = graphs.get(gid, graphs["a"])
+        s, t = map(int, rng.choice(g.n, 2, replace=False))
+        dl = [None, 0.05, 50.0, 2000.0][int(rng.integers(0, 4))]
+        reqs.append(PathQueryRequest(uid=uid, s=s, t=t,
+                                     k=int(rng.integers(2, 5)),
+                                     graph_id=gid, deadline_ms=dl))
+
+    async def drive():
+        async with AsyncHcPEServer(
+                reg, batch_window_ms=float(rng.choice([0.0, 1.0])),
+                max_queue_depth=8) as srv:
+            resps = await srv.serve(reqs)
+            return srv, snapshot(srv), resps
+
+    srv, snap, resps = asyncio.run(drive())
+    s = snap.serve
+    assert s.submitted == len(reqs)
+    assert s.submitted == s.accepted + s.rejected_total
+    assert s.accepted == (s.completed + s.rejected_mid_flight + s.cancelled
+                          + s.failed)                 # fully drained
+    assert s.failed == 0 and s.cancelled == 0
+    assert s.completed == sum(1 for r in resps if r.status == STATUS_OK)
+    assert s.slo_met == sum(1 for r in resps if r.slo_met is True)
+    assert s.slo_missed == sum(1 for r in resps if r.slo_met is False)
+    assert snap.violations() == []
+    # the exports stay serializable under every traffic mix
+    json.loads(snap.to_json())
+    assert snap.to_prometheus().count("# TYPE") > 10
+
+
+# ---------------------------------------------------------------------------
+# server-side conveniences
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_methods_match_free_function():
+    srv = _two_tenant_server()
+    a = srv.metrics_snapshot()
+    b = snapshot(srv)
+    da, db = a.to_dict(), b.to_dict()
+    da.pop("captured_at"), db.pop("captured_at")
+    assert da == db
+
+    async def drive():
+        async with AsyncHcPEServer(srv.registry.get("a"),
+                                   batch_window_ms=0.0) as asrv:
+            await asrv.serve(_requests(srv.registry.get("a"), 3,
+                                       np.random.default_rng(1), "default"))
+            return asrv.metrics_snapshot()
+
+    snap = asyncio.run(drive())
+    assert snap.serve is not None and snap.violations() == []

@@ -404,3 +404,42 @@ if HAVE_HYPOTHESIS:
         assert enumerate_paths_join(
             idx, cut=max(1, k // 2), order=order,
             weights=weights).as_tuples() == want
+
+
+# ---------------------------------------------------------------------------
+# masked + precomputed distances: the streaming/distributed hand-off leg
+# ---------------------------------------------------------------------------
+
+def _check_masked_precomputed_matches_oracle(seed):
+    """Fuzz the masked precomputed-distance hand-off (the leak regression,
+    DESIGN.md §12): distances computed on the mask-filtered graph and
+    injected via ``_precomputed_distances`` must yield exactly the oracle
+    path set of the filtered graph — never a masked-out edge."""
+    from repro.core import DEFAULT_GRAPH_ID
+    from repro.core.batch import edge_mask_hash
+
+    g, s, t, k = _random_case(seed)
+    rng = np.random.default_rng(seed)
+    mask = rng.random(g.m) < 0.7
+    gf = from_edges(g.n, g.edge_list()[mask])      # ground-truth graph
+    want = oracle.paths_as_set(oracle.enumerate_paths(gf, s, t, k))
+
+    mh = edge_mask_hash(mask)
+    idx = build_index(g, s, t, k, edge_mask=mask)
+    pre = {(DEFAULT_GRAPH_ID, s, t, k, mh, g.version):
+           (idx.dist_s, idx.dist_t)}
+    out = BatchPathEnum().run(g, [(s, t, k)], count_only=False,
+                              edge_mask=mask, _precomputed_distances=pre)
+    got = oracle.paths_as_set(out.items[0].result.as_tuples())
+    assert got == want, f"seed={seed} n={g.n} m={g.m} q=({s},{t},{k})"
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_masked_precomputed_matches_oracle_smoke(seed):
+    _check_masked_precomputed_matches_oracle(3000 + seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(3008, 3008 + 96))
+def test_masked_precomputed_matches_oracle_sweep(seed):
+    _check_masked_precomputed_matches_oracle(seed)

@@ -1,0 +1,240 @@
+"""Streaming graph mutation: versioned copies, cache invalidation, hot-swap.
+
+The contract under test (DESIGN.md §12) has two layers: ``Graph.with_edges``
+must behave exactly like a fresh ``from_edges`` build of the mutated edge
+set (plus a monotone ``version`` bump), and the serving stack above it —
+cache keys, registry ``mutate``/``register``, both front-ends — must never
+answer a post-mutation query with a pre-mutation index.  The stale-index
+regression tests pin the second layer by diffing against a cold engine:
+byte-identical counts, zero cache hits across the mutation boundary.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import BatchPathEnum, PathEnum, erdos_renyi, from_edges
+from repro.serving import (AsyncHcPEServer, GraphRegistry, HcPEServer,
+                           PathQueryRequest, STATUS_OK,
+                           STATUS_REJECTED_TENANT_QUOTA)
+
+
+def _edge_set(g):
+    return {(int(u), int(v)) for u, v in g.edge_list()}
+
+
+# ---------------------------------------------------------------------------
+# Graph.with_edges: versioned copy == fresh build
+# ---------------------------------------------------------------------------
+
+def test_with_edges_add_remove_matches_fresh_build():
+    g = erdos_renyi(40, 3.0, seed=5)
+    rng = np.random.default_rng(1)
+    drop = g.edge_list()[rng.choice(g.m, 5, replace=False)]
+    new = np.array([[0, 39], [39, 0], [7, 11]])
+    g2 = g.with_edges(add=new, remove=drop)
+
+    want = _edge_set(g) - {(int(u), int(v)) for u, v in drop}
+    want |= {(int(u), int(v)) for u, v in new}
+    assert _edge_set(g2) == want
+    assert g2.version == g.version + 1
+    # the mutated CSR must be indistinguishable from a cold build of the
+    # same edge set — reverse CSR included (the index build walks both)
+    fresh = from_edges(g.n, np.array(sorted(want)))
+    np.testing.assert_array_equal(g2.indptr, fresh.indptr)
+    np.testing.assert_array_equal(g2.indices, fresh.indices)
+    np.testing.assert_array_equal(g2.rindptr, fresh.rindptr)
+    np.testing.assert_array_equal(g2.rindices, fresh.rindices)
+    # original untouched (versioned copy, not in-place)
+    assert g.version == 0 and _edge_set(g) != want
+
+
+def test_with_edges_version_is_monotone_per_mutation():
+    g = from_edges(4, np.array([[0, 1], [1, 2]]))
+    g1 = g.add_edges(np.array([[2, 3]]))
+    g2 = g1.remove_edges(np.array([[2, 3]]))
+    g3 = g2.with_edges()            # no-op mutation still advances the epoch
+    assert [g.version, g1.version, g2.version, g3.version] == [0, 1, 2, 3]
+    assert _edge_set(g2) == _edge_set(g)
+
+
+def test_with_edges_duplicate_insert_is_setlike_and_self_loops_drop():
+    g = from_edges(4, np.array([[0, 1]]))
+    g2 = g.add_edges(np.array([[0, 1], [0, 1], [2, 2], [1, 2]]))
+    assert _edge_set(g2) == {(0, 1), (1, 2)}
+
+
+def test_with_edges_remove_then_add_same_edge_reinserts():
+    g = from_edges(3, np.array([[0, 1], [1, 2]]))
+    g2 = g.with_edges(add=np.array([[0, 1]]), remove=np.array([[0, 1]]))
+    assert _edge_set(g2) == {(0, 1), (1, 2)}
+
+
+def test_with_edges_rejects_missing_removal_and_bad_endpoints():
+    g = from_edges(4, np.array([[0, 1], [1, 2]]))
+    with pytest.raises(ValueError, match=r"cannot remove edge \(2, 3\)"):
+        g.remove_edges(np.array([[2, 3]]))
+    with pytest.raises(ValueError, match="endpoints"):
+        g.add_edges(np.array([[0, 4]]))
+    with pytest.raises(ValueError, match="endpoints"):
+        g.remove_edges(np.array([[-1, 0]]))
+
+
+# ---------------------------------------------------------------------------
+# stale-index regression: a mutated graph never serves a pre-mutation index
+# ---------------------------------------------------------------------------
+
+def test_mutated_graph_never_serves_stale_index():
+    """The acceptance criterion: warm an engine on v0, mutate, and the v1
+    run must miss the cache and agree with a cold engine byte-for-byte."""
+    g = erdos_renyi(60, 3.0, seed=8)
+    rng = np.random.default_rng(3)
+    queries = []
+    while len(queries) < 8:
+        s, t = map(int, rng.choice(g.n, 2, replace=False))
+        queries.append((s, t, int(rng.integers(2, 6))))
+
+    eng = BatchPathEnum()
+    eng.run(g, queries)                       # warm the cache on version 0
+    g2 = g.with_edges(add=np.array([[0, 1], [1, 0]]),
+                      remove=g.edge_list()[:3])
+
+    before = eng.cache.stats.snapshot()
+    warm = eng.run(g2, queries)
+    delta = eng.cache.stats.delta(before)
+    assert delta.hits == 0                    # v0 entries unreachable
+    assert delta.misses == len(queries)
+    cold = BatchPathEnum().run(g2, queries)
+    assert warm.counts.tolist() == cold.counts.tolist()
+
+    # and the v0 entries still serve v0 queries (coexisting epochs)
+    before = eng.cache.stats.snapshot()
+    again = eng.run(g, queries)
+    assert eng.cache.stats.delta(before).hits == len(queries)
+    seq = PathEnum()
+    assert again.counts.tolist() == [seq.count(g, s, t, k)
+                                     for (s, t, k) in queries]
+
+
+def test_registry_mutate_purges_engine_entries_and_keeps_quota():
+    g = erdos_renyi(40, 3.0, seed=2)
+    reg = GraphRegistry()
+    reg.register("fraud", g, cache_quota=4)
+    srv = HcPEServer(reg)
+    reqs = [PathQueryRequest(uid=i, s=i, t=i + 10, k=3, graph_id="fraud")
+            for i in range(6)]
+    srv.serve(reqs)
+    assert srv.engine.cache.tenant_len("fraud") == 4     # quota bound held
+
+    entry = reg.mutate("fraud", add=np.array([[0, 39]]))
+    assert entry.graph.version == 1
+    assert srv.engine.cache.tenant_len("fraud") == 0     # purged
+    assert srv.engine.cache.quota_for("fraud") == 4      # quota survives
+
+    before = srv.engine.cache.stats_for("fraud").snapshot()
+    resp, _ = srv.serve(reqs)
+    assert all(r.status == STATUS_OK for r in resp)
+    delta = srv.engine.cache.stats_for("fraud").delta(before)
+    assert delta.hits == 0                               # nothing stale served
+    cold = BatchPathEnum().run(entry.graph, [(q.s, q.t, q.k) for q in reqs])
+    assert [r.count for r in resp] == cold.counts.tolist()
+
+
+def test_register_hot_swap_is_equivalent_to_mutate():
+    """register() over a live id is the hot-swap path: v2 in, v1 entries
+    out, answers immediately match a cold engine on v2."""
+    g1 = erdos_renyi(40, 3.0, seed=6)
+    reg = GraphRegistry()
+    reg.register("social", g1)
+    srv = HcPEServer(reg)
+    reqs = [PathQueryRequest(uid=i, s=i, t=i + 5, k=3, graph_id="social")
+            for i in range(5)]
+    srv.serve(reqs)
+    assert srv.engine.cache.tenant_len("social") > 0
+
+    g2 = g1.with_edges(remove=g1.edge_list()[:4])
+    reg.register("social", g2)
+    assert srv.engine.cache.tenant_len("social") == 0
+    resp, _ = srv.serve(reqs)
+    cold = BatchPathEnum().run(g2, [(q.s, q.t, q.k) for q in reqs])
+    assert [r.count for r in resp] == cold.counts.tolist()
+
+
+def test_mutate_weighted_tenant_requires_new_weights():
+    g = from_edges(4, np.array([[0, 1], [1, 2], [2, 3]]))
+    reg = GraphRegistry()
+    reg.register("w", g, edge_weights=np.ones(g.m))
+    with pytest.raises(ValueError, match="edge_weights"):
+        reg.mutate("w", add=np.array([[0, 2]]))
+    entry = reg.mutate("w", add=np.array([[0, 2]]),
+                       edge_weights=np.full(4, 2.0))
+    assert entry.graph.m == 4 and entry.edge_weights.shape == (4,)
+    with pytest.raises(ValueError, match="shape"):
+        reg.mutate("w", remove=np.array([[0, 2]]),
+                   edge_weights=np.ones(4))   # stale length for mutated graph
+
+
+def test_async_server_crosses_mutation_epoch():
+    """Mutation between async waves: the second wave's answers must match
+    a cold engine on the mutated graph (no stale index via the cache)."""
+    g = erdos_renyi(50, 3.0, seed=9)
+    reg = GraphRegistry()
+    reg.register("live", g)
+
+    reqs = [PathQueryRequest(uid=i, s=i, t=i + 7, k=3, graph_id="live")
+            for i in range(6)]
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=1.0) as srv:
+            first = await srv.serve(reqs)
+            entry = reg.mutate("live", add=np.array([[0, 49], [49, 0]]))
+            second = await srv.serve(reqs)
+            return first, second, entry.graph
+
+    first, second, g2 = asyncio.run(drive())
+    assert all(r.status == STATUS_OK for r in first + second)
+    cold1 = BatchPathEnum().run(g, [(q.s, q.t, q.k) for q in reqs])
+    cold2 = BatchPathEnum().run(g2, [(q.s, q.t, q.k) for q in reqs])
+    assert [r.count for r in first] == cold1.counts.tolist()
+    assert [r.count for r in second] == cold2.counts.tolist()
+
+
+# ---------------------------------------------------------------------------
+# live quota adjustment (the control plane's write path)
+# ---------------------------------------------------------------------------
+
+def test_set_cache_quota_live_sheds_to_new_bound():
+    g = erdos_renyi(40, 3.0, seed=4)
+    reg = GraphRegistry()
+    reg.register("t", g)
+    srv = HcPEServer(reg)
+    reqs = [PathQueryRequest(uid=i, s=i, t=i + 9, k=3, graph_id="t")
+            for i in range(6)]
+    srv.serve(reqs)
+    assert srv.engine.cache.tenant_len("t") == 6
+    entry = reg.set_cache_quota("t", 2)
+    assert entry.cache_quota == 2
+    assert srv.engine.cache.tenant_len("t") == 2       # shed immediately
+    reg.set_cache_quota("t", None)                     # unbound again
+    srv.serve(reqs)
+    assert srv.engine.cache.tenant_len("t") == 6
+
+
+def test_set_max_pending_applies_at_next_admission():
+    g = erdos_renyi(30, 3.0, seed=7)
+    reg = GraphRegistry()
+    reg.register("t", g)
+
+    async def drive():
+        async with AsyncHcPEServer(reg, batch_window_ms=1.0) as srv:
+            reg.set_max_pending("t", 0)        # live clamp: admit nothing
+            r1 = await srv.submit(PathQueryRequest(uid=1, s=0, t=5, k=3,
+                                                   graph_id="t"))
+            reg.set_max_pending("t", None)     # lift it
+            r2 = await srv.submit(PathQueryRequest(uid=2, s=0, t=5, k=3,
+                                                   graph_id="t"))
+            return r1, r2
+
+    r1, r2 = asyncio.run(drive())
+    assert r1.status == STATUS_REJECTED_TENANT_QUOTA
+    assert r2.status == STATUS_OK
