@@ -35,6 +35,8 @@ def main() -> None:
     suites.append(("fig_ranked_enum", ranked_enum.run))
     from . import streaming
     suites.append(("streaming", streaming.run))
+    from . import sharing
+    suites.append(("fig_sharing", sharing.run))
     suites.append(("kernels", kernels_bench.run))
     suites.append(("roofline", roofline.run))
     if not args.skip_collectives:

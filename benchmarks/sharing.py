@@ -1,0 +1,98 @@
+"""Cross-query structure sharing benchmark (DESIGN.md §13).
+
+    PYTHONPATH=src python -m benchmarks.run --only fig_sharing
+
+The workload is the Zipfian hub shape realistic traffic produces
+(millions of users querying the same hub vertices): batches of
+*distinct* queries fanning out of a handful of high-degree hubs on the
+``pl_hub`` power-law graph, each hot (hub, target) pair served under a
+spread of hop budgets (different users, different SLAs) — the case
+PR 1's exact-key dedup cannot collapse, because no two queries are
+equal, yet almost all of the work is common: the BFS distance passes
+of the same pair at different ``k`` coincide, and the prefix trees out
+of each hub overlap.
+
+Each row pair serves the same batch on two cold engines — ``sharing=
+"off"`` (the dedup-only baseline: per-query indexes, per-query walks)
+vs ``sharing="auto"`` (merged group indexes + one shared-prefix walk
+per hub group) — and the headline row is the throughput multiple.
+Counts are asserted byte-identical first: sharing that changed an
+answer would be a bug, not a speedup (tests/test_sharing.py holds the
+full byte-identity contract; the benchmark just refuses to price a
+wrong answer).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import BatchPathEnum, power_law
+
+Row = Tuple[str, float, str]
+
+
+def hub_fanout_queries(g, hubs: int, fanout: int,
+                       budgets: Tuple[int, ...] = (2, 3, 4, 5),
+                       seed: int = 0) -> List[Tuple[int, int, int]]:
+    """Distinct (hub, t, k) queries out of the top-degree hubs: targets
+    drawn from each hub's 2-hop out-cone (so the prefix trees overlap),
+    each hot pair queried under every hop budget in ``budgets`` (so the
+    distance passes overlap — no two queries equal, exact-key dedup
+    collapses nothing)."""
+    rng = np.random.default_rng(seed)
+    deg = np.diff(g.indptr)
+    queries: List[Tuple[int, int, int]] = []
+    for hub in map(int, np.argsort(deg)[::-1][:hubs]):
+        # 2-hop cone: the targets shared prefixes can actually reach
+        one = g.indices[g.indptr[hub]:g.indptr[hub + 1]]
+        two = np.unique(np.concatenate(
+            [g.indices[g.indptr[v]:g.indptr[v + 1]] for v in one]
+            + [one])) if one.size else np.array([], np.int64)
+        cone = two[two != hub]
+        if cone.size == 0:
+            continue
+        picks = rng.choice(cone, size=min(fanout, cone.size), replace=False)
+        queries.extend((hub, int(t), k) for t in picks for k in budgets)
+    return queries
+
+
+def _serve(queries, g, sharing: str, count_only: bool, reps: int) -> Tuple[
+        float, "object"]:
+    """Best-of-reps wall seconds on a cold engine per rep (cold = the
+    honest baseline: warm LRUs would hide the construction share)."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        eng = BatchPathEnum(sharing=sharing)
+        t0 = time.perf_counter()
+        o = eng.run(g, queries, count_only=count_only)
+        best = min(best, time.perf_counter() - t0)
+        out = o
+    return best, out
+
+
+def run(hubs: int = 3, fanout: int = 12,
+        budgets: Tuple[int, ...] = (2, 3, 4, 5),
+        reps: int = 3) -> List[Row]:
+    """One suite run; returns ``(name, value, derived)`` CSV rows."""
+    rows: List[Row] = []
+    g = power_law(3000, 8.0, seed=1)          # the pl_hub workload graph
+    queries = hub_fanout_queries(g, hubs, fanout, budgets)
+
+    for count_only in (True, False):
+        tag = "count" if count_only else "paths"
+        off_s, off = _serve(queries, g, "off", count_only, reps)
+        on_s, on = _serve(queries, g, "auto", count_only, reps)
+        for a, b in zip(on.items, off.items):
+            assert a.result.count == b.result.count, "sharing changed counts"
+        mult = off_s / max(on_s, 1e-12)
+        qps_on = len(queries) / max(on_s, 1e-12)
+        rows.append((f"fig_sharing/{tag}_dedup_only_ms", off_s * 1e3,
+                     f"q={len(queries)}"))
+        rows.append((f"fig_sharing/{tag}_shared_ms", on_s * 1e3,
+                     f"groups={on.sharing_groups} "
+                     f"shared={on.shared_queries}"))
+        rows.append((f"fig_sharing/{tag}_throughput_multiple", mult,
+                     f"{qps_on:.0f}qps_shared"))
+    return rows

@@ -26,7 +26,11 @@ from typing import Iterator, List, Tuple
 from ..framework import Finding, LintContext, LintPass, SourceFile
 
 #: the audited set: the serving surface + the batch engine it fronts
-AUDITED_SCOPE = ("src/repro/serving/*.py", "src/repro/core/batch.py")
+AUDITED_SCOPE = (
+    "src/repro/serving/*.py",
+    "src/repro/core/batch.py",
+    "src/repro/core/sharing.py",
+)
 
 _ANCHOR = re.compile(r"DESIGN\.md §(\d+)(?:-(\d+))?")
 _MD_LINK = re.compile(r"\]\(([^)]+)\)")

@@ -39,8 +39,9 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import planner as planner_mod
+from . import sharing as sharing_mod
 from .enumerate import EnumResult, EnumStats, enumerate_paths_idx
-from .graph import Graph
+from .graph import Graph, from_edges
 from .index import LightweightIndex, build_index
 from .join import enumerate_paths_join
 from .pathenum import PathEnum
@@ -357,6 +358,7 @@ class BatchItem:
     index_cached: bool          # index came from the LRU (no build)
     deduplicated: bool          # enumeration reused an earlier item's result
     latency_seconds: float      # attributable work for THIS query
+    shared: bool = False        # enumerated via a shared group walk (§13)
 
 
 @dataclasses.dataclass
@@ -386,6 +388,8 @@ class BatchOutput:
     cache_stats: CacheStats          # delta for this batch
     distinct_queries: int
     graph_id: str = DEFAULT_GRAPH_ID  # the tenant this batch served
+    sharing_groups: int = 0          # shared walks executed (DESIGN.md §13)
+    shared_queries: int = 0          # distinct queries served off a walk
 
     @property
     def counts(self) -> np.ndarray:
@@ -448,24 +452,41 @@ class BatchPathEnum:
                  max_partials: Optional[int] = 20_000_000,
                  cache_capacity: int = 256, bfs_block: int = 128,
                  tenant_quotas: Optional[Dict[str, int]] = None,
-                 backend: str = "host") -> None:
+                 backend: str = "host", sharing: str = "auto") -> None:
+        if sharing not in ("auto", "off"):
+            raise ValueError(f"unknown sharing mode {sharing!r}")
         self.engine = PathEnum(tau=tau, chunk_size=chunk_size,
                                max_partials=max_partials, backend=backend)
         self.cache = IndexCache(capacity=cache_capacity,
                                 tenant_quotas=tenant_quotas)
         self.bfs_block = bfs_block
+        # cross-query sharing knob (DESIGN.md §13): "auto" groups and
+        # shares where profitable, "off" pins the exact solo pipeline;
+        # either way results are byte-identical (tests/test_sharing.py).
+        self.sharing = sharing
+        self.group_cache = sharing_mod.GroupIndexCache(capacity=64)
 
     # -- index acquisition --------------------------------------------------
     def _indexes_for(self, graph: Graph, keys: List[QueryKey],
                      edge_mask: Optional[np.ndarray],
                      precomputed: Optional[Dict[QueryKey, Tuple[np.ndarray,
                                                                 np.ndarray]]],
-                     timing: BatchTiming) -> Dict[QueryKey, Tuple[LightweightIndex, bool]]:
+                     timing: BatchTiming,
+                     group_builds: bool = False
+                     ) -> Dict[QueryKey, Tuple[LightweightIndex, bool]]:
         """Resolve each distinct key to (index, was_cached).
 
         Cache misses on the unmasked graph batch their BFS passes through
         the stacked relaxation; masked queries fall back to the per-query
         build (the mask changes the graph under the BFS).
+
+        With ``group_builds`` (sharing enabled, DESIGN.md §13) two more
+        construction levers engage, both byte-identical to the solo
+        build: masked batches filter the graph *once* (so every masked
+        miss builds — and batch-BFSes — on one shared filtered graph
+        instead of re-filtering per key), and misses sharing an s or t
+        build through ``sharing.build_member_indexes``'s common edge
+        arena.
         """
         resolved: Dict[QueryKey, Tuple[LightweightIndex, bool]] = {}
         missing: List[QueryKey] = []
@@ -496,31 +517,111 @@ class BatchPathEnum:
         unmasked = [k for k in missing if k[4] == 0 and k not in dists]
         if unmasked:
             t0 = time.perf_counter()
-            stacked = batched_index_distances(
-                graph, [(s, t, k) for (_, s, t, k, _, _) in unmasked],
-                block=self.bfs_block)
+            dists.update(self._stacked_dists(graph, unmasked, group_builds))
             timing.distance_seconds += time.perf_counter() - t0
-            dists.update(dict(zip(unmasked, stacked)))
+
+        build_graph = graph
+        eff_mask = edge_mask
+        if group_builds and edge_mask is not None and len(missing) > 1:
+            # one filtered graph serves every masked miss; building on it
+            # (mask dropped) is byte-identical to the per-key masked
+            # build, which constructs exactly this graph internally
+            t0 = time.perf_counter()
+            keep = np.asarray(edge_mask, dtype=bool)
+            edges = np.stack([graph.esrc[keep], graph.edst[keep]], axis=1)
+            build_graph = from_edges(graph.n, edges, dedup=False)
+            eff_mask = None
+            masked_missing = [kk for kk in missing if kk not in dists]
+            if masked_missing:
+                dists.update(self._stacked_dists(build_graph, masked_missing,
+                                                 group_builds))
+            timing.distance_seconds += time.perf_counter() - t0
+
+        built: Dict[QueryKey, LightweightIndex] = {}
+        if group_builds:
+            groupable = [kk for kk in missing if kk in dists]
+            for grp in sharing_mod.detect_groups(groupable):
+                t0 = time.perf_counter()
+                idxs = sharing_mod.build_member_indexes(
+                    build_graph,
+                    [(kk[1], kk[2], kk[3]) for kk in grp.keys],
+                    [dists[kk] for kk in grp.keys])
+                timing.index_seconds += time.perf_counter() - t0
+                built.update(zip(grp.keys, idxs))
 
         for key in missing:
             _, s, t, k, _mh, _gv = key
             t0 = time.perf_counter()
-            if key in dists:
+            if key in built:
+                idx = built[key]
+            elif key in dists:
                 # the mask still threads through: build_index must filter
                 # the edge set even when the distances are precomputed,
                 # or masked-out edges leak into the index (the distances
                 # themselves are the caller's contract — computed on the
                 # same filtered graph)
                 d_s, d_t = dists[key]
-                idx = build_index(graph, s, t, k,
+                idx = build_index(build_graph, s, t, k,
                                   dist_fn=lambda *_a, _d=(d_s, d_t): _d,
-                                  edge_mask=edge_mask)
+                                  edge_mask=eff_mask)
             else:  # masked query — BFS must run on the filtered graph
-                idx = build_index(graph, s, t, k, edge_mask=edge_mask)
+                idx = build_index(build_graph, s, t, k, edge_mask=eff_mask)
             timing.index_seconds += time.perf_counter() - t0
             self.cache.put(key, idx)
             resolved[key] = (idx, False)
         return resolved
+
+    def _stacked_dists(self, graph: Graph, keys: List[QueryKey],
+                       dedup_pairs: bool
+                       ) -> Dict[QueryKey, Tuple[np.ndarray, np.ndarray]]:
+        """Stacked BFS for a list of distinct keys.
+
+        With ``dedup_pairs`` (sharing enabled, DESIGN.md §13) the BFS runs
+        one row per distinct ``(s, t)`` *pair* at the pair's max hop
+        budget, then clips each key's copy to its own ``k + 1`` sentinel.
+        That is byte-identical to the per-key rows — the stacked
+        relaxation already runs every row to the block's max k and clips,
+        so values ≤ k match the bounded queue BFS exactly and everything
+        beyond collapses onto the same sentinel — but it collapses the
+        hot Zipfian case exact-key dedup cannot touch: the same pair
+        queried under many hop budgets pays for one BFS pair, not one
+        per budget.
+        """
+        if not dedup_pairs:
+            stacked = batched_index_distances(
+                graph, [(s, t, k) for (_, s, t, k, _, _) in keys],
+                block=self.bfs_block)
+            return dict(zip(keys, stacked))
+        pair_k: Dict[Tuple[int, int], int] = {}
+        for (_, s, t, k, _mh, _gv) in keys:
+            pair_k[(s, t)] = max(pair_k.get((s, t), 0), k)
+        pairs = list(pair_k)
+        stacked = batched_index_distances(
+            graph, [(s, t, pair_k[(s, t)]) for (s, t) in pairs],
+            block=self.bfs_block)
+        by_pair = dict(zip(pairs, stacked))
+        out: Dict[QueryKey, Tuple[np.ndarray, np.ndarray]] = {}
+        for key in keys:
+            _, s, t, k, _mh, _gv = key
+            d_s, d_t = by_pair[(s, t)]
+            out[key] = (np.minimum(d_s, k + 1).astype(np.int32),
+                        np.minimum(d_t, k + 1).astype(np.int32))
+        return out
+
+    # -- planning -----------------------------------------------------------
+    def _plan_for(self, idx: LightweightIndex, k: int, mode: str) -> Plan:
+        """One distinct query's plan under the batch ``mode`` knob."""
+        if mode == "auto":
+            return planner_mod.plan_query(idx, tau=self.engine.tau)
+        if mode == "dfs":
+            return Plan(method="dfs", cut=None, preliminary=-1.0,
+                        used_full_estimator=False)
+        if mode == "join":
+            dp_plan = planner_mod.plan_query(idx, tau=-1.0)
+            cut = dp_plan.cut if dp_plan.cut else max(1, k // 2)
+            return Plan(method="join", cut=cut, preliminary=-1.0,
+                        used_full_estimator=True)
+        raise ValueError(f"unknown mode {mode!r}")
 
     # -- enumeration --------------------------------------------------------
     def _enumerate(self, idx: LightweightIndex, plan: Plan, count_only: bool,
@@ -546,10 +647,21 @@ class BatchPathEnum:
             graph_id: str = DEFAULT_GRAPH_ID,
             order: Optional[str] = None,
             weights: Optional[np.ndarray] = None,
+            sharing: Optional[str] = None,
             _precomputed_distances: Optional[Dict[QueryKey, Tuple[np.ndarray,
                                                                   np.ndarray]]] = None,
             ) -> BatchOutput:
         """Serve a batch; returns per-query items in input order.
+
+        ``sharing`` overrides the engine's cross-query sharing knob for
+        this run (DESIGN.md §13): ``"auto"`` detects overlap groups
+        (shared s/t under this run's graph/mask/version), builds merged
+        group indexes and walks shared prefixes once; ``"off"`` pins the
+        per-query pipeline.  Results are byte-identical either way —
+        sharing only changes *where* the work happens, and unprofitable
+        or unsafe groups (ranked batches, over-budget walks) fall back
+        to the solo path automatically.  ``REPRO_SHARING=off`` in the
+        environment force-disables it regardless of this argument.
 
         ``order`` requests ranked (any-k) enumeration for the whole batch
         (DESIGN.md §10): each query's paths come back in non-decreasing
@@ -594,9 +706,40 @@ class BatchPathEnum:
         gv = int(graph.version)
         keys = [(graph_id, int(s), int(t), int(k), mh, gv)
                 for (s, t, k) in queries]
+        eff_sharing: str = sharing_mod.resolve_sharing(
+            self.sharing if sharing is None else sharing)
 
         resolved = self._indexes_for(graph, keys, edge_mask,
-                                     _precomputed_distances, timing)
+                                     _precomputed_distances, timing,
+                                     group_builds=eff_sharing == "auto")
+
+        # sharing phase (DESIGN.md §13): plan the distinct keys up front,
+        # then serve whole overlap groups off one shared prefix walk.
+        # Ranked batches opt out — their drivers emit in rank order, which
+        # a shared walk does not reproduce — and keep Level-A (construction)
+        # sharing only.
+        shared_results: Dict[QueryKey, EnumResult] = {}
+        shared_latency: Dict[QueryKey, float] = {}
+        plans_pre: Dict[QueryKey, Plan] = {}
+        plan_wall: Dict[QueryKey, float] = {}
+        n_groups = 0
+        if eff_sharing == "auto" and order is None:
+            for key in keys:
+                if key in plans_pre:
+                    continue
+                t0 = time.perf_counter()
+                plan = self._plan_for(resolved[key][0], key[3], mode)
+                plan_wall[key] = time.perf_counter() - t0
+                timing.optimize_seconds += plan.optimize_seconds
+                plans_pre[key] = plan
+            if len(plans_pre) > 1:
+                t1 = time.perf_counter()
+                shared_results, shared_latency, n_groups = \
+                    sharing_mod.run_shared_groups(
+                        self, resolved, plans_pre, count_only=count_only,
+                        first_n=first_n, deadline=deadline,
+                        graph_id=graph_id)
+                timing.enumerate_seconds += time.perf_counter() - t1
 
         items: List[Optional[BatchItem]] = [None] * len(keys)
         memo: Dict[QueryKey, BatchItem] = {}
@@ -609,27 +752,28 @@ class BatchPathEnum:
                     latency_seconds=time.perf_counter() - t0)
                 continue
             idx, was_cached = resolved[key]
-            if mode == "auto":
-                plan = planner_mod.plan_query(idx, tau=self.engine.tau)
-            elif mode == "dfs":
-                plan = Plan(method="dfs", cut=None, preliminary=-1.0,
-                            used_full_estimator=False)
-            elif mode == "join":
-                dp_plan = planner_mod.plan_query(idx, tau=-1.0)
-                cut = dp_plan.cut if dp_plan.cut else max(1, key[3] // 2)
-                plan = Plan(method="join", cut=cut, preliminary=-1.0,
-                            used_full_estimator=True)
+            plan_opt = plans_pre.get(key)
+            if plan_opt is None:
+                plan = self._plan_for(idx, key[3], mode)
+                timing.optimize_seconds += plan.optimize_seconds
             else:
-                raise ValueError(f"unknown mode {mode!r}")
-            timing.optimize_seconds += plan.optimize_seconds
-            t1 = time.perf_counter()
-            res = self._enumerate(idx, plan, count_only, first_n, deadline,
-                                  order=order, weights=weights)
-            timing.enumerate_seconds += time.perf_counter() - t1
+                plan = plan_opt
+            res_opt = shared_results.get(key)
+            if res_opt is not None:
+                res = res_opt
+                extra = shared_latency[key] + plan_wall.get(key, 0.0)
+            else:
+                extra = plan_wall.get(key, 0.0)
+                t1 = time.perf_counter()
+                res = self._enumerate(idx, plan, count_only, first_n,
+                                      deadline, order=order, weights=weights)
+                timing.enumerate_seconds += time.perf_counter() - t1
             item = BatchItem(s=key[1], t=key[2], k=key[3], result=res,
                              plan=plan, index_cached=was_cached,
                              deduplicated=False,
-                             latency_seconds=time.perf_counter() - t0)
+                             latency_seconds=(time.perf_counter() - t0
+                                              + extra),
+                             shared=res_opt is not None)
             memo[key] = item
             items[pos] = item
 
@@ -638,7 +782,9 @@ class BatchPathEnum:
         timing.total_seconds = timing.ended_at - t_batch
         return BatchOutput(items=list(items), timing=timing,  # type: ignore[arg-type]
                            cache_stats=self.cache.stats.delta(stats_before),
-                           distinct_queries=len(memo), graph_id=graph_id)
+                           distinct_queries=len(memo), graph_id=graph_id,
+                           sharing_groups=n_groups,
+                           shared_queries=len(shared_results))
 
     def counts(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
                **kw) -> np.ndarray:

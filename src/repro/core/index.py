@@ -127,13 +127,20 @@ class LightweightIndex:
 def _offsets_from_sorted(keys_primary: np.ndarray, keys_secondary: np.ndarray,
                          n: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
     """begin (n,), end (n, k+1) over arrays already sorted by (primary, sec)."""
-    cnt2d = np.zeros((n, k + 2), dtype=np.int64)
-    if keys_primary.size:
-        np.add.at(cnt2d, (keys_primary, np.minimum(keys_secondary, k + 1)), 1)
-    per_v = cnt2d.sum(axis=1)
-    begin = np.zeros(n, dtype=np.int64)
-    np.cumsum(per_v[:-1], out=begin[1:])
-    end = begin[:, None] + np.cumsum(cnt2d[:, : k + 1], axis=1)
+    # fusing (primary, clipped secondary) into one key turns both tables
+    # into searchsorted lookups — begin[v] counts edges with primary < v,
+    # end[v, b] additionally admits primary == v with secondary <= b —
+    # replacing the dense (n, k+2) scatter + cumsum passes, which dominate
+    # the build for sparse selections (the common case for group members,
+    # DESIGN.md §13)
+    width = np.int64(k + 2)
+    fused = (keys_primary.astype(np.int64) * width
+             + np.minimum(keys_secondary.astype(np.int64), k + 1))
+    grid = np.arange(n, dtype=np.int64) * width
+    begin = np.searchsorted(fused, grid, side="left")
+    probes = grid[:, None] + np.arange(k + 1, dtype=np.int64)[None, :]
+    end = np.searchsorted(fused, probes.reshape(-1),
+                          side="right").reshape(n, k + 1)
     return begin, end
 
 

@@ -103,8 +103,16 @@ def enumerate_paths_join(
     deadline: Optional[float] = None,
     order: Optional[str] = None,
     weights: Optional[np.ndarray] = None,
+    _shared_ra=None,
 ) -> EnumResult:
     """Algorithm 6 with cut position ``cut`` (i*).
+
+    ``_shared_ra`` is the cross-query sharing hook (DESIGN.md §13): a
+    callable ``(stats, max_partials) -> ndarray`` that stands in for
+    the R_a half expansion, deriving the same width-``cut+1`` relation
+    (same rows, same stats accrual, same ``EngineLimit`` behavior) from
+    a group's shared prefix walk instead of a private one.  R_b, the
+    sort-merge join and every output contract are unchanged.
 
     ``first_n`` is the paper's response-time mode on the join plan: both
     halves are still evaluated in full (the join needs them), but emission
@@ -143,8 +151,11 @@ def enumerate_paths_join(
         return _finalize(idx, [], [], 0, stats, exhausted=False)
 
     # R_a = Q[0:cut]: tuples of cut+1 vertices starting at s (position 0)
-    ra = _expand_to_width(idx, np.array([s], np.int32), 0, cut + 1, stats,
-                          max_partials)
+    if _shared_ra is not None:
+        ra = _shared_ra(stats, max_partials)
+    else:
+        ra = _expand_to_width(idx, np.array([s], np.int32), 0, cut + 1,
+                              stats, max_partials)
     stats.ra_size = ra.shape[0]
     if ra.shape[0] == 0:
         return _finalize(idx, [], [], 0, stats, exhausted=True)

@@ -174,7 +174,8 @@ class DistributedPathEnum:
     def enumerate_batch(self, queries: np.ndarray, count_only: bool = True,
                         first_n: Optional[int] = None,
                         engine: Optional[BatchPathEnum] = None,
-                        graph_id: str = DEFAULT_GRAPH_ID) -> BatchOutput:
+                        graph_id: str = DEFAULT_GRAPH_ID,
+                        sharing: Optional[str] = None) -> BatchOutput:
         """Batch entry point: mesh distances, host enumeration.
 
         ``queries`` is (Q, 2) of (s, t); the hop bound is the engine's k.
@@ -191,12 +192,18 @@ class DistributedPathEnum:
         engine's LRU, so a shared host engine keeps tenants' entries
         apart.  Multi-tenant routing across instances lives in
         ``DistributedTenantRouter``.
+
+        ``sharing`` forwards to the host engine's structure-sharing knob
+        (DESIGN.md §13; None keeps the engine's own setting): the mesh
+        computes every member's distances, the host engine still groups
+        shared-endpoint queries through one merged index and walk.
         """
         engine = engine or BatchPathEnum()
         q = np.asarray(queries, np.int64).reshape(-1, 2)
         triples = [(int(s), int(t), self.k) for (s, t) in q]
         if q.shape[0] == 0:
-            return engine.run(self.graph, [], graph_id=graph_id)
+            return engine.run(self.graph, [], graph_id=graph_id,
+                              sharing=sharing)
         dsize = self.mesh.shape["data"]
         pad = (-q.shape[0]) % dsize
         padded = np.concatenate([q, np.repeat(q[:1], pad, axis=0)]) \
@@ -207,6 +214,7 @@ class DistributedPathEnum:
                for i, (s, t, k) in enumerate(triples)}
         return engine.run(self.graph, triples, count_only=count_only,
                           first_n=first_n, graph_id=graph_id,
+                          sharing=sharing,
                           _precomputed_distances=pre)
 
 
@@ -230,6 +238,7 @@ class DistributedTenantRouter:
     def enumerate(self, tagged_queries: Sequence[Tuple[str, int, int]],
                   count_only: bool = True,
                   first_n: Optional[int] = None,
+                  sharing: Optional[str] = None,
                   ) -> Tuple[List[object], Dict[str, BatchOutput]]:
         """Serve ``(graph_id, s, t)`` queries; unknown ids raise KeyError.
 
@@ -249,7 +258,7 @@ class DistributedTenantRouter:
                           for p in positions], np.int64)
             out = self.tenants[gid].enumerate_batch(
                 q, count_only=count_only, first_n=first_n,
-                engine=self.engine, graph_id=gid)
+                engine=self.engine, graph_id=gid, sharing=sharing)
             outputs[gid] = out
             for p, item in zip(positions, out.items):
                 items[p] = item

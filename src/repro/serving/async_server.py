@@ -191,6 +191,10 @@ class AsyncHcPEServer:
         DFS-expansion backend ("host" / "device" / "auto", DESIGN.md §9)
         for the default-constructed engine; callers handing their own
         ``engine`` set the knob there instead.
+    sharing:
+        Cross-query structure sharing for the default-constructed engine
+        ("auto" / "off", DESIGN.md §13); micro-batches group eligible
+        same-tenant queries through one shared walk.
     """
 
     def __init__(self, graph: Union[Graph, GraphRegistry],
@@ -202,9 +206,11 @@ class AsyncHcPEServer:
                  default_deadline_ms: Optional[float] = None,
                  enforce_deadlines: bool = False,
                  report_capacity: int = 256,
-                 backend: str = "host") -> None:
+                 backend: str = "host",
+                 sharing: str = "auto") -> None:
         self.registry = GraphRegistry.wrap(graph)
-        self.engine = engine or BatchPathEnum(backend=backend)
+        self.engine = engine or BatchPathEnum(backend=backend,
+                                              sharing=sharing)
         self.registry.bind_engine(self.engine)
         self.batch_window_ms = batch_window_ms
         self.max_queue_depth = max_queue_depth

@@ -127,6 +127,8 @@ class BatchServeReport:
         default_factory=EnumStats)    # merged Fig.-6 enumeration counters
     tenant_cache: Dict[str, CacheStats] = dataclasses.field(
         default_factory=dict)         # the same delta, split per graph_id
+    sharing_groups: int = 0           # structure-sharing groups (§13)
+    shared_queries: int = 0           # queries served off a shared walk
 
     @property
     def chunks(self) -> int:
@@ -149,7 +151,9 @@ class BatchServeReport:
                    results_per_second=out.total_results / max(wall, 1e-12),
                    p50_ms=pct["p50_ms"], p90_ms=pct["p90_ms"],
                    p99_ms=pct["p99_ms"], cache=out.cache_stats,
-                   enum_stats=out.enum_stats)
+                   enum_stats=out.enum_stats,
+                   sharing_groups=out.sharing_groups,
+                   shared_queries=out.shared_queries)
 
     @classmethod
     def from_outputs(cls, outputs: List[BatchOutput]) -> "BatchServeReport":
@@ -239,12 +243,15 @@ class HcPEServer:
 
     def __init__(self, graph: Union[Graph, GraphRegistry],
                  engine: Optional[BatchPathEnum] = None,
-                 backend: str = "host") -> None:
+                 backend: str = "host",
+                 sharing: str = "auto") -> None:
         self.registry = GraphRegistry.wrap(graph)
         # `backend` configures the default-constructed engine's DFS
-        # expansion (DESIGN.md §9); callers handing their own engine set
-        # the knob there instead.
-        self.engine = engine or BatchPathEnum(backend=backend)
+        # expansion (DESIGN.md §9) and `sharing` its cross-query
+        # structure sharing (DESIGN.md §13); callers handing their own
+        # engine set both knobs there instead.
+        self.engine = engine or BatchPathEnum(backend=backend,
+                                              sharing=sharing)
         self.registry.bind_engine(self.engine)
         # lifetime Fig.-6 counters across serve() calls, feeding the
         # metrics control plane (serving/metrics.py, DESIGN.md §12)
@@ -367,4 +374,8 @@ def _merge_outputs(outputs: List[BatchOutput]) -> BatchOutput:
         cache.evictions += o.cache_stats.evictions
     return BatchOutput(items=items, timing=timing, cache_stats=cache,
                        distinct_queries=sum(o.distinct_queries
-                                            for o in outputs))
+                                            for o in outputs),
+                       sharing_groups=sum(o.sharing_groups
+                                          for o in outputs),
+                       shared_queries=sum(o.shared_queries
+                                          for o in outputs))

@@ -198,6 +198,10 @@ class GraphRegistry:
     def _drop_from_engines(self, graph_id: str) -> None:
         for engine in self._engines:
             engine.cache.drop_tenant(graph_id)
+            # merged group indexes (DESIGN.md §13) key on the members'
+            # tenant-qualified QueryKeys; stale groups are unreachable
+            # already — this frees their memory on retire/mutate.
+            engine.group_cache.drop_tenant(graph_id)
 
     # -- lookup -------------------------------------------------------------
 

@@ -555,3 +555,104 @@ def test_masked_precomputed_distances_keep_the_mask():
     # the unmasked counts differ somewhere, or the mask proved nothing
     free = BatchPathEnum().run(g, queries)
     assert free.counts.tolist() != got.counts.tolist()
+
+
+# ---------------------------------------------------------------------------
+# structure sharing: the merged-group-index identities (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# Two properties lock the Level-A layout: the merged arena's edge set is
+# the exact union of the members' light-index edge sets (no over- or
+# under-pruning), and each member's mask row re-derives that member's
+# solo ``build_index`` output byte-for-byte (``member_view``), as does
+# the grouped construction path (``build_member_indexes``).  Checked on
+# a deterministic seeded sweep always, and under hypothesis (shrinking
+# toward the minimal disagreeing group) when it is installed.
+
+import dataclasses as _dc
+
+from repro.core import from_edges
+from repro.core import sharing as _sharing
+from repro.core.bfs import index_distances_np
+from repro.core.index import LightweightIndex
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _index_mismatch(a, b):
+    """Name of the first LightweightIndex field that differs, or None."""
+    for f in _dc.fields(LightweightIndex):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            if va.dtype != vb.dtype or not np.array_equal(va, vb):
+                return f.name
+        elif va != vb:
+            return f.name
+    return None
+
+
+def _check_merged_index_identities(g, s0, triples):
+    dists = [index_distances_np(g, s, t, k) for (s, t, k) in triples]
+    solos = [build_index(g, s, t, k, dist_fn=lambda *_a, _d=d: _d)
+             for (s, t, k), d in zip(triples, dists)]
+    # grouped construction == solo construction, field for field
+    grouped = _sharing.build_member_indexes(g, triples, dists)
+    for gi, si, tr in zip(grouped, solos, triples):
+        bad = _index_mismatch(gi, si)
+        assert bad is None, f"build_member_indexes.{bad} differs for {tr}"
+    merged = _sharing.MergedGroupIndex.from_members(solos, kind="s",
+                                                    anchor=s0)
+    # arena edge set == exact union of the members' index edge sets
+    union = set()
+    for m in solos:
+        union |= set(m.fwd_eid.tolist())
+    assert set(merged.union_edge_ids.tolist()) == union
+    # each member's mask re-derives its solo index byte-for-byte
+    for j, (si, tr) in enumerate(zip(solos, triples)):
+        bad = _index_mismatch(merged.member_view(j), si)
+        assert bad is None, f"member_view.{bad} differs for {tr}"
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_merged_group_index_identities(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 24))
+    g = from_edges(n, rng.integers(0, n, size=(int(rng.integers(n, 4 * n)),
+                                               2)))
+    s0 = int(rng.integers(0, n))
+    triples = []
+    for t in map(int, rng.choice(n, size=4, replace=False)):
+        if t != s0:
+            triples.append((s0, t, int(rng.integers(2, 7))))
+    if len(triples) < 2:
+        pytest.skip("degenerate draw")
+    _check_merged_index_identities(g, s0, triples)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def shared_s_group(draw):
+        n = draw(st.integers(6, 20))
+        m = draw(st.integers(n, 3 * n))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        g = from_edges(n, np.array(edges, dtype=np.int64))
+        s0 = draw(st.integers(0, n - 1))
+        targets = draw(st.lists(
+            st.integers(0, n - 1).filter(lambda x: x != s0),
+            min_size=2, max_size=5, unique=True))
+        triples = [(s0, t, draw(st.integers(2, 6))) for t in targets]
+        return g, s0, triples
+
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(shared_s_group())
+    def test_hypothesis_merged_group_index_identities(case):
+        g, s0, triples = case
+        _check_merged_index_identities(g, s0, triples)

@@ -225,6 +225,21 @@ def test_auto_rule_forces_device_only_when_dense(monkeypatch):
     assert resolve_backend(idx, "auto") == "host"   # CPU, not forced
 
 
+def test_resolve_sharing_env_matrix(monkeypatch):
+    """The §13 escape hatch row of the fallback matrix: REPRO_SHARING=off
+    (or 0) wins over every knob value, mirroring REPRO_DEVICE_ENUM."""
+    from repro.core import sharing as sharing_mod
+    assert sharing_mod.resolve_sharing("auto") == "auto"
+    assert sharing_mod.resolve_sharing(None) == "auto"
+    monkeypatch.setenv("REPRO_SHARING", "off")
+    assert sharing_mod.resolve_sharing("auto") == "off"
+    assert sharing_mod.resolve_sharing(None) == "off"
+    monkeypatch.setenv("REPRO_SHARING", "0")
+    assert sharing_mod.resolve_sharing("auto") == "off"
+    monkeypatch.delenv("REPRO_SHARING")
+    assert sharing_mod.resolve_sharing("auto") == "auto"
+
+
 # ---------------------------------------------------------------------------
 # random-chunk parity: host and device _expand_chunk agree bit-for-bit.
 # Two layers: a deterministic seeded sweep that always runs (hypothesis

@@ -443,3 +443,118 @@ def test_masked_precomputed_matches_oracle_smoke(seed):
 @pytest.mark.parametrize("seed", range(3008, 3008 + 96))
 def test_masked_precomputed_matches_oracle_sweep(seed):
     _check_masked_precomputed_matches_oracle(seed)
+
+
+# ---------------------------------------------------------------------------
+# structure sharing: sharing == no-sharing == oracle on hub-shaped batches
+# ---------------------------------------------------------------------------
+#
+# The §13 contract fuzzed three ways at once: a shared batch's per-query
+# path sets equal the backtracking oracle's, and the materialized
+# results (paths, lengths, stats, exhausted) are byte-identical to the
+# sharing="off" run.  Batches are hub-shaped on purpose — overlapping
+# shared-s and shared-t groups around one hub vertex, duplicate (s, t)
+# at different k, disjoint strays — the overlap patterns real Zipfian
+# traffic produces and exact-key dedup cannot collapse.
+
+SHARING_FAST_CASES = 10
+SHARING_SWEEP_CASES = 120
+
+
+def _hub_batch(seed):
+    """Random digraph + an overlapping-group batch around one hub."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 26))
+    density = float(rng.choice([1.0, 2.0, 3.5]))
+    m = max(n, int(n * density))
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    hub = int(rng.integers(0, n))
+    queries = []
+    for t in map(int, rng.choice(n, size=int(rng.integers(2, 5)),
+                                 replace=False)):
+        if t != hub:
+            queries.append((hub, t, int(rng.integers(2, 7))))
+    for s in map(int, rng.choice(n, size=int(rng.integers(2, 5)),
+                                 replace=False)):
+        if s != hub:
+            queries.append((s, hub, int(rng.integers(2, 7))))
+    if queries:
+        s0, t0, k0 = queries[0]
+        queries.append((s0, t0, min(6, k0 + 1)))   # same (s,t), other k
+    for _ in range(int(rng.integers(0, 3))):
+        a, b = map(int, rng.choice(n, 2, replace=False))
+        queries.append((a, b, int(rng.integers(2, 6))))
+    return g, queries
+
+
+def _check_sharing_matches_oracle(seed):
+    g, queries = _hub_batch(seed)
+    if len(queries) < 2:
+        return
+    for mode in ("auto", "dfs", "join"):
+        on = BatchPathEnum(sharing="auto").run(g, queries,
+                                               count_only=False, mode=mode)
+        off = BatchPathEnum(sharing="off").run(g, queries,
+                                               count_only=False, mode=mode)
+        for (s, t, k), a, b in zip(queries, on.items, off.items):
+            label = f"seed={seed} mode={mode} q=({s},{t},{k})"
+            want = oracle.paths_as_set(oracle.enumerate_paths(g, s, t, k))
+            assert oracle.paths_as_set(a.result.as_tuples()) == want, \
+                f"sharing != oracle [{label}]"
+            assert np.array_equal(a.result.paths, b.result.paths), label
+            assert np.array_equal(a.result.lengths, b.result.lengths), label
+            assert a.result.stats == b.result.stats, label
+            assert a.result.exhausted == b.result.exhausted, label
+
+
+@pytest.mark.parametrize("seed", range(SHARING_FAST_CASES))
+def test_sharing_matches_oracle_smoke(seed):
+    _check_sharing_matches_oracle(9000 + seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(9000 + SHARING_FAST_CASES,
+                                       9000 + SHARING_FAST_CASES
+                                       + SHARING_SWEEP_CASES))
+def test_sharing_matches_oracle_sweep(seed):
+    _check_sharing_matches_oracle(seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def hub_batch(draw):
+        """graph_query scaled up to a batch: overlapping shared-s and
+        shared-t groups around a drawn hub, duplicate (s, t) at two
+        different k — shrinking drives toward the minimal overlapping
+        pair that still disagrees."""
+        g, _s, _t, _k = draw(graph_query())
+        hub = draw(st.integers(0, g.n - 1))
+        outs = draw(st.lists(
+            st.integers(0, g.n - 1).filter(lambda x: x != hub),
+            min_size=2, max_size=5, unique=True))
+        ins = draw(st.lists(
+            st.integers(0, g.n - 1).filter(lambda x: x != hub),
+            min_size=0, max_size=4, unique=True))
+        queries = [(hub, t, draw(st.integers(2, 6))) for t in outs]
+        queries += [(s, hub, draw(st.integers(2, 6))) for s in ins]
+        s0, t0, k0 = queries[0]
+        queries.append((s0, t0, draw(st.integers(2, 6))))
+        return g, queries
+
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(hub_batch())
+    def test_hypothesis_sharing_parity(hb):
+        g, queries = hb
+        want = [oracle.paths_as_set(oracle.enumerate_paths(g, s, t, k))
+                for (s, t, k) in queries]
+        for mode in ("auto", "dfs", "join"):
+            on = BatchPathEnum(sharing="auto").run(
+                g, queries, count_only=False, mode=mode)
+            off = BatchPathEnum(sharing="off").run(
+                g, queries, count_only=False, mode=mode)
+            for w, a, b in zip(want, on.items, off.items):
+                assert oracle.paths_as_set(a.result.as_tuples()) == w
+                assert np.array_equal(a.result.paths, b.result.paths)
+                assert a.result.stats == b.result.stats

@@ -1,0 +1,293 @@
+"""Shared-enumeration parity suite (DESIGN.md §13).
+
+Cross-query structure sharing has exactly one contract: byte-identity.
+A batch served with ``sharing="auto"`` must return, for every query,
+the same paths, lengths, counts, ``exhausted`` flags *and* Fig.-6
+``EnumStats`` as (a) the same batch with ``sharing="off"`` and (b) a
+per-query ``PathEnum.query`` run — across every backend (host + the
+Pallas device leg), every plan (auto / dfs / join) and every grouping
+shape (shared-s fan-out, shared-t fan-in, disjoint, duplicate (s, t)
+at mixed k).  The suite also pins the serving-option edges (``first_n``
+exact-n trims, deadline ``exhausted=False`` truncations), the
+``REPRO_SHARING=off`` escape hatch, the ranked-batch exclusion, and
+mutation invalidation of the merged group-index cache (§12 × §13).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BatchPathEnum, PathEnum, from_edges
+from repro.core import sharing as sharing_mod
+from repro.serving import GraphRegistry, HcPEServer, PathQueryRequest
+
+
+def _graph(seed, n=18, mean_deg=4.0):
+    rng = np.random.default_rng(seed)
+    m = max(n, int(n * mean_deg))
+    return from_edges(n, rng.integers(0, n, size=(m, 2)))
+
+
+# grouping shapes over an 18-vertex graph: every predicate branch of
+# sharing.detect_groups, plus a no-group control
+SHAPES = {
+    "shared_s": [(1, t, 4) for t in (2, 3, 5, 7, 9, 11)],
+    "shared_t": [(s, 2, 4) for s in (1, 3, 5, 7, 9)],
+    "disjoint": [(1, 2, 4), (3, 4, 5), (5, 6, 3), (7, 8, 4)],
+    "mixed_k": [(1, 5, 3), (1, 5, 5), (1, 6, 4), (1, 7, 6), (2, 5, 4)],
+}
+
+
+def _assert_result_equal(a, b, label):
+    assert a.count == b.count, f"count {label}"
+    assert np.array_equal(a.paths, b.paths), f"paths {label}"
+    assert np.array_equal(a.lengths, b.lengths), f"lengths {label}"
+    assert a.exhausted == b.exhausted, f"exhausted {label}"
+    assert a.stats == b.stats, f"stats {label}"
+
+
+def _run_parity(g, queries, *, mode="auto", backend="host",
+                count_only=False, first_n=None, check_solo=True):
+    """sharing on vs off vs per-query PathEnum, byte-for-byte."""
+    on = BatchPathEnum(sharing="auto", backend=backend).run(
+        g, queries, count_only=count_only, first_n=first_n, mode=mode)
+    off = BatchPathEnum(sharing="off", backend=backend).run(
+        g, queries, count_only=count_only, first_n=first_n, mode=mode)
+    assert off.sharing_groups == 0 and off.shared_queries == 0
+    solo = PathEnum(backend=backend)
+    for (s, t, k), a, b in zip(queries, on.items, off.items):
+        label = f"q=({s},{t},{k}) mode={mode} backend={backend}"
+        _assert_result_equal(a.result, b.result, f"on-vs-off {label}")
+        assert a.plan.method == b.plan.method, label
+        if check_solo:
+            want = solo.query(g, s, t, k, mode=mode, count_only=count_only,
+                              first_n=first_n)
+            _assert_result_equal(a.result, want.result,
+                                 f"on-vs-solo {label}")
+    return on
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix: plan x grouping shape x serving options (host)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["auto", "dfs", "join"])
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_parity_host(mode, shape):
+    for seed in (0, 1, 2):
+        _run_parity(_graph(seed), SHAPES[shape], mode=mode)
+
+
+@pytest.mark.parametrize("mode", ["auto", "dfs", "join"])
+@pytest.mark.parametrize("count_only", [True, False])
+def test_parity_serving_options(mode, count_only):
+    g = _graph(3)
+    _run_parity(g, SHAPES["shared_s"], mode=mode, count_only=count_only)
+
+
+@pytest.mark.parametrize("mode", ["dfs", "join"])
+@pytest.mark.parametrize("first_n", [1, 3])
+def test_first_n_exact_trim(mode, first_n):
+    """first_n trims to exactly n when more exist — identical trim point
+    with sharing on, off, and solo (join members with first_n never
+    share, so the join leg pins the exclusion path)."""
+    g = _graph(4, mean_deg=6.0)
+    out = _run_parity(g, SHAPES["shared_s"], mode=mode, first_n=first_n)
+    for item in out.items:
+        res = item.result
+        assert res.count <= first_n
+        if not res.exhausted:
+            assert res.count == first_n      # exact-n, never first_n-ish
+    if mode == "join":
+        # the §13 join/first_n exclusion: no query shares, parity holds
+        assert out.shared_queries == 0
+
+
+def test_deadline_truncation_parity():
+    """An already-expired deadline: the walk falls back (SharingFallback)
+    and every item reports the truncation contract, identically on/off."""
+    g = _graph(5)
+    dl = time.perf_counter()          # in the past by the time run() looks
+    on = BatchPathEnum(sharing="auto").run(
+        g, SHAPES["shared_s"], count_only=False, deadline=dl)
+    off = BatchPathEnum(sharing="off").run(
+        g, SHAPES["shared_s"], count_only=False, deadline=dl)
+    assert on.shared_queries == 0     # deadline pressure kills the group
+    for a, b in zip(on.items, off.items):
+        assert not a.result.exhausted
+        _assert_result_equal(a.result, b.result, "deadline")
+
+
+# ---------------------------------------------------------------------------
+# device leg: the Pallas frontier kernel under a shared walk (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["auto", "dfs"])
+def test_parity_device_backend(monkeypatch, mode):
+    """Replay parity on the device backend (interpret mode on CPU): §9's
+    host/device bit-parity composes with §13's sharing byte-identity."""
+    monkeypatch.setenv("REPRO_DEVICE_ENUM", "force")
+    g = _graph(6)
+    out = _run_parity(g, SHAPES["shared_s"], mode=mode, backend="device")
+    assert out.shared_queries >= 2    # sharing really was on
+
+
+# ---------------------------------------------------------------------------
+# sharing observability + the escape hatch
+# ---------------------------------------------------------------------------
+
+def test_sharing_fires_and_is_flagged():
+    g = _graph(7, mean_deg=6.0)
+    out = BatchPathEnum(sharing="auto").run(g, SHAPES["shared_s"],
+                                            count_only=False, mode="dfs")
+    assert out.sharing_groups >= 1
+    assert out.shared_queries >= 2
+    assert sum(item.shared for item in out.items) == out.shared_queries
+    off = BatchPathEnum(sharing="off").run(g, SHAPES["shared_s"],
+                                           count_only=False, mode="dfs")
+    assert not any(item.shared for item in off.items)
+
+
+def test_env_escape_hatch_forces_off(monkeypatch):
+    """REPRO_SHARING=off wins over both the engine and per-run knobs —
+    the operational kill switch mirrors REPRO_DEVICE_ENUM (§9)."""
+    g = _graph(8)
+    monkeypatch.setenv("REPRO_SHARING", "off")
+    out = BatchPathEnum(sharing="auto").run(
+        g, SHAPES["shared_s"], count_only=False, sharing="auto")
+    assert out.sharing_groups == 0 and out.shared_queries == 0
+    monkeypatch.delenv("REPRO_SHARING")
+    ref = BatchPathEnum(sharing="off").run(g, SHAPES["shared_s"],
+                                           count_only=False)
+    for a, b in zip(out.items, ref.items):
+        _assert_result_equal(a.result, b.result, "escape hatch")
+
+
+def test_resolve_sharing_matrix():
+    assert sharing_mod.resolve_sharing(None) == "auto"
+    assert sharing_mod.resolve_sharing("auto") == "auto"
+    assert sharing_mod.resolve_sharing("off") == "off"
+    with pytest.raises(ValueError):
+        sharing_mod.resolve_sharing("on")
+    with pytest.raises(ValueError):
+        BatchPathEnum(sharing="maybe")
+
+
+def test_per_run_override_beats_engine_knob():
+    g = _graph(9)
+    eng = BatchPathEnum(sharing="auto")
+    out = eng.run(g, SHAPES["shared_s"], count_only=False, sharing="off")
+    assert out.sharing_groups == 0
+    out2 = eng.run(g, SHAPES["shared_s"], count_only=False)
+    assert out2.shared_queries >= 2
+    for a, b in zip(out.items, out2.items):
+        _assert_result_equal(a.result, b.result, "per-run override")
+
+
+# ---------------------------------------------------------------------------
+# PR-6 interaction: ranked batches never share the walk (DESIGN.md §10 x §13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ["hops", "weight"])
+def test_ranked_batches_skip_shared_walk(order):
+    """Rank-order emission is per query; a shared walk cannot reproduce
+    it, so ranked batches enumerate solo — and stay byte-identical."""
+    g = _graph(10, mean_deg=5.0)
+    w = np.random.default_rng(0).integers(0, 4, size=g.m).astype(np.float64)
+    weights = w if order == "weight" else None
+    on = BatchPathEnum(sharing="auto").run(
+        g, SHAPES["shared_s"], count_only=False, order=order,
+        weights=weights)
+    off = BatchPathEnum(sharing="off").run(
+        g, SHAPES["shared_s"], count_only=False, order=order,
+        weights=weights)
+    assert on.shared_queries == 0
+    for (s, t, k), a, b in zip(SHAPES["shared_s"], on.items, off.items):
+        _assert_result_equal(a.result, b.result, f"ranked {order}")
+        assert a.result.as_tuples() == b.result.as_tuples()
+
+
+# ---------------------------------------------------------------------------
+# PR-8 interaction: mutation invalidates merged group indexes (§12 x §13)
+# ---------------------------------------------------------------------------
+
+def test_mutate_invalidates_group_cache():
+    """graph_version sits inside every member QueryKey, so a §12 mutation
+    makes the old merged index unreachable; the registry purge frees it.
+    Post-mutation results must reflect the new topology, not the cached
+    group."""
+    g = _graph(11)
+    registry = GraphRegistry()
+    registry.register("a", g)
+    server = HcPEServer(registry, sharing="auto")
+    reqs = [PathQueryRequest(uid=i, s=1, t=t, k=4, count_only=False)
+            for i, t in enumerate((2, 3, 5, 7))]
+    for r in reqs:
+        r.graph_id = "a"
+    resps1, report1 = server.serve(reqs)
+    assert report1.shared_queries >= 2
+    assert len(server.engine.group_cache) >= 1
+    # drop every edge out of the hub: the shared-s group's answers change
+    keep = g.edge_list()[g.edge_list()[:, 0] != 1]
+    registry.mutate("a", remove=g.edge_list()[g.edge_list()[:, 0] == 1])
+    assert len(server.engine.group_cache) == 0      # purged on mutate
+    resps2, _ = server.serve(reqs)
+    for r in resps2:
+        assert r.count == 0                         # hub unplugged
+    # parity against a cold engine on the mutated graph
+    g2 = registry.get("a")
+    cold = BatchPathEnum(sharing="off").run(
+        g2, [(1, t, 4) for t in (2, 3, 5, 7)], count_only=False)
+    for r, item in zip(resps2, cold.items):
+        assert r.count == item.result.count
+    assert keep.shape[0] == g2.m
+
+
+def test_group_cache_reuse_across_batches():
+    """The second identical batch serves its merged index off the LRU:
+    same results, no growth, observable reuse."""
+    g = _graph(12, mean_deg=6.0)
+    eng = BatchPathEnum(sharing="auto")
+    out1 = eng.run(g, SHAPES["shared_s"], count_only=False, mode="dfs")
+    assert out1.shared_queries >= 2
+    size = len(eng.group_cache)
+    assert size >= 1
+    out2 = eng.run(g, SHAPES["shared_s"], count_only=False, mode="dfs")
+    assert len(eng.group_cache) == size
+    for a, b in zip(out1.items, out2.items):
+        _assert_result_equal(a.result, b.result, "warm group cache")
+
+
+# ---------------------------------------------------------------------------
+# serving plumbing: the knob reaches the servers, counters reach reports
+# ---------------------------------------------------------------------------
+
+def test_server_reports_sharing_counters():
+    g = _graph(13, mean_deg=6.0)
+    server = HcPEServer(g, sharing="auto")
+    reqs = [PathQueryRequest(uid=i, s=1, t=t, k=4, count_only=False)
+            for i, t in enumerate((2, 3, 5, 7, 9))]
+    _, report = server.serve(reqs)
+    assert report.shared_queries >= 2
+    assert report.sharing_groups >= 1
+    off_server = HcPEServer(g, sharing="off")
+    resps_on, _ = server.serve(reqs)
+    resps_off, report_off = off_server.serve(reqs)
+    assert report_off.shared_queries == 0
+    for a, b in zip(resps_on, resps_off):
+        assert a.count == b.count
+        assert np.array_equal(a.paths, b.paths)
+
+
+def test_walk_fallback_on_oversized_group(monkeypatch):
+    """A walk over SHARING_MAX_NODES raises SharingFallback and the group
+    quietly runs per query — results identical, nothing shared."""
+    monkeypatch.setattr(sharing_mod, "SHARING_MAX_NODES", 1)
+    g = _graph(14, mean_deg=6.0)
+    out = BatchPathEnum(sharing="auto").run(g, SHAPES["shared_s"],
+                                            count_only=False, mode="dfs")
+    assert out.shared_queries == 0
+    ref = BatchPathEnum(sharing="off").run(g, SHAPES["shared_s"],
+                                           count_only=False, mode="dfs")
+    for a, b in zip(out.items, ref.items):
+        _assert_result_equal(a.result, b.result, "oversized fallback")
