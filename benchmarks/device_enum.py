@@ -1,24 +1,41 @@
-"""fig_device_enum — host vs device IDX-DFS enumeration, end to end.
+"""fig_device_enum — host vs device PathEnum execution, end to end.
 
-The trajectory row for DESIGN.md §9: the same `enumerate_paths_idx` walk
-with frontier expansion on the host (numpy) and on the device backend
-(the Pallas kernel — interpreted on this CPU container, Mosaic on TPU),
-over two workload graphs from workloads.py.  Counts are asserted equal,
-so the wall numbers always compare identical work; the derived column
-records the Fig.-6 counters the kernel returned as device scalars.
+The trajectory rows for DESIGN.md §9, three columns:
+
+* **dfs**: the same `enumerate_paths_idx` walk with frontier expansion
+  on the host (numpy) and on the device backend (the Pallas kernel —
+  interpreted on this CPU container, Mosaic on TPU; the device leg runs
+  the resident work deque unless ``REPRO_DEVICE_DEQUE=off``).
+* **join**: the join/count plan's hop-count DP (Alg. 5) on the host
+  float64 edge-list build vs the device semiring-SpMM build, with the
+  DP tables asserted bit-equal and the downstream join enumeration
+  asserted to produce identical counts/stats from either build.
+* **fused**: a micro-batch of queries through `core.batch.BatchPathEnum`
+  with fused multi-query launches vs the solo host batch — counts and
+  stats asserted equal per query, and the dispatch count the fusion
+  issued recorded in the row (the whole point: one dispatch per
+  expansion round for the batch, not per query).
+
+Counts are asserted equal in every column, so the wall numbers always
+compare identical work.
 """
 from __future__ import annotations
 
 import time
 from typing import List, Tuple
 
+import numpy as np
+
 from repro.core import build_index, enumerate_paths_idx
+from repro.core.batch import BatchPathEnum
+from repro.core.join import enumerate_paths_join, hop_count_dp
 
 from .workloads import GRAPHS, high_degree_queries
 
 Row = Tuple[str, float, str]
 
 WORKLOADS = (("dag", 5), ("dense", 4))
+FUSED_QUERIES = 4
 
 
 def run() -> List[Row]:
@@ -27,6 +44,8 @@ def run() -> List[Row]:
         g = GRAPHS[gname]()
         s, t = high_degree_queries(g, 1, seed=11)[0]
         idx = build_index(g, s, t, k)
+
+        # dfs column: host walk vs device walk (resident deque)
         res = {}
         for backend in ("host", "device"):
             t0 = time.perf_counter()
@@ -39,4 +58,53 @@ def run() -> List[Row]:
                          f"edges={st.edges_accessed};chunks={st.chunks}"))
         assert res["host"].count == res["device"].count, gname
         assert res["host"].stats == res["device"].stats, gname
+
+        # join column: hop-count DP host vs device builds, bit-equal
+        # tables, identical join enumeration from either
+        dps = {}
+        for backend in ("host", "device"):
+            t0 = time.perf_counter()
+            dps[backend] = hop_count_dp(idx, backend=backend)
+            ms = (time.perf_counter() - t0) * 1e3
+            rows.append((f"fig_device_enum/{gname}_join_{backend}_ms", ms,
+                         f"cut={dps[backend].cut};"
+                         f"q={dps[backend].q_total:.0f};"
+                         f"built={dps[backend].backend_used}"))
+        assert np.array_equal(dps["host"].c_to, dps["device"].c_to), gname
+        assert np.array_equal(dps["host"].c_from,
+                              dps["device"].c_from), gname
+        assert dps["host"].cut == dps["device"].cut, gname
+        cut = {b: min(max(dps[b].cut, 1), k - 1)
+               for b in ("host", "device")}  # DP may prefer dfs (cut=0)
+        jres = {b: enumerate_paths_join(idx, cut[b], count_only=True)
+                for b in ("host", "device")}
+        assert jres["host"].count == jres["device"].count, gname
+        assert jres["host"].stats == jres["device"].stats, gname
+        rows.append((f"fig_device_enum/{gname}_join_results",
+                     float(jres["device"].count),
+                     f"cut={cut['device']}"))
+
+    # fused-launch row: a micro-batch through fused multi-query device
+    # launches vs the solo host batch — same counts/stats per query,
+    # dispatch count recorded
+    g = GRAPHS["dag"]()
+    qs = [(s, t, 5) for s, t in
+          high_degree_queries(g, FUSED_QUERIES, seed=23)]
+    host_eng = BatchPathEnum(backend="host", fused="off")
+    t0 = time.perf_counter()
+    host_out = host_eng.run(g, qs, count_only=True)
+    host_ms = (time.perf_counter() - t0) * 1e3
+    fused_eng = BatchPathEnum(backend="device", fused="auto")
+    t0 = time.perf_counter()
+    fused_out = fused_eng.run(g, qs, count_only=True)
+    fused_ms = (time.perf_counter() - t0) * 1e3
+    for hi, fi in zip(host_out.items, fused_out.items):
+        assert hi.result.count == fi.result.count, (hi.s, hi.t)
+        assert hi.result.stats == fi.result.stats, (hi.s, hi.t)
+    rows.append(("fig_device_enum/fused_batch_host_ms", host_ms,
+                 f"queries={len(qs)};"
+                 f"results={sum(i.result.count for i in host_out.items)}"))
+    rows.append(("fig_device_enum/fused_batch_device_ms", fused_ms,
+                 f"queries={fused_out.fused_queries};"
+                 f"dispatches={fused_out.fused_dispatches}"))
     return rows

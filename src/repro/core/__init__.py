@@ -15,7 +15,7 @@ from .batch import (BatchItem, BatchOutput, BatchPathEnum, BatchTiming,
                     batched_index_distances, edge_mask_hash, tenant_of)
 from .baseline import generic_dfs
 from .rank import RankSpec, make_rank_spec
-from . import oracle, constraints, rank, relations
+from . import clock, oracle, constraints, rank, relations
 
 __all__ = [
     "Graph", "from_edges", "erdos_renyi", "power_law", "layered_dag", "grid",

@@ -359,6 +359,7 @@ class BatchItem:
     deduplicated: bool          # enumeration reused an earlier item's result
     latency_seconds: float      # attributable work for THIS query
     shared: bool = False        # enumerated via a shared group walk (§13)
+    fused: bool = False         # enumerated via a fused device launch (§9)
 
 
 @dataclasses.dataclass
@@ -390,6 +391,8 @@ class BatchOutput:
     graph_id: str = DEFAULT_GRAPH_ID  # the tenant this batch served
     sharing_groups: int = 0          # shared walks executed (DESIGN.md §13)
     shared_queries: int = 0          # distinct queries served off a walk
+    fused_queries: int = 0           # distinct queries in the fused launch
+    fused_dispatches: int = 0        # kernel dispatches the fusion issued
 
     @property
     def counts(self) -> np.ndarray:
@@ -452,9 +455,12 @@ class BatchPathEnum:
                  max_partials: Optional[int] = 20_000_000,
                  cache_capacity: int = 256, bfs_block: int = 128,
                  tenant_quotas: Optional[Dict[str, int]] = None,
-                 backend: str = "host", sharing: str = "auto") -> None:
+                 backend: str = "host", sharing: str = "auto",
+                 fused: str = "auto") -> None:
         if sharing not in ("auto", "off"):
             raise ValueError(f"unknown sharing mode {sharing!r}")
+        if fused not in ("auto", "off"):
+            raise ValueError(f"unknown fused mode {fused!r}")
         self.engine = PathEnum(tau=tau, chunk_size=chunk_size,
                                max_partials=max_partials, backend=backend)
         self.cache = IndexCache(capacity=cache_capacity,
@@ -464,6 +470,13 @@ class BatchPathEnum:
         # shares where profitable, "off" pins the exact solo pipeline;
         # either way results are byte-identical (tests/test_sharing.py).
         self.sharing = sharing
+        # fused-launch knob (DESIGN.md §9): "auto" packs the batch's
+        # device-eligible dfs-plan queries into fused multi-query kernel
+        # launches (one dispatch per expansion round for the whole
+        # micro-batch), "off" pins the solo per-query dispatch stream;
+        # results are byte-identical either way
+        # (tests/test_fused_launch.py).
+        self.fused = fused
         self.group_cache = sharing_mod.GroupIndexCache(capacity=64)
 
     # -- index acquisition --------------------------------------------------
@@ -610,14 +623,18 @@ class BatchPathEnum:
 
     # -- planning -----------------------------------------------------------
     def _plan_for(self, idx: LightweightIndex, k: int, mode: str) -> Plan:
-        """One distinct query's plan under the batch ``mode`` knob."""
+        """One distinct query's plan under the batch ``mode`` knob.  The
+        engine backend steers where the full DP runs (join.hop_count_dp,
+        DESIGN.md §9); the plan itself is backend-independent."""
         if mode == "auto":
-            return planner_mod.plan_query(idx, tau=self.engine.tau)
+            return planner_mod.plan_query(idx, tau=self.engine.tau,
+                                          backend=self.engine.backend)
         if mode == "dfs":
             return Plan(method="dfs", cut=None, preliminary=-1.0,
                         used_full_estimator=False)
         if mode == "join":
-            dp_plan = planner_mod.plan_query(idx, tau=-1.0)
+            dp_plan = planner_mod.plan_query(idx, tau=-1.0,
+                                             backend=self.engine.backend)
             cut = dp_plan.cut if dp_plan.cut else max(1, k // 2)
             return Plan(method="join", cut=cut, preliminary=-1.0,
                         used_full_estimator=True)
@@ -678,7 +695,7 @@ class BatchPathEnum:
         and run one batch per group.  The default id keeps single-graph
         callers on the exact pre-tenancy behavior.
 
-        ``deadline`` (absolute ``time.perf_counter()``) is the batch's
+        ``deadline`` (absolute ``core.clock.now()``) is the batch's
         cooperative stop: enumeration halts at the next chunk boundary
         after it passes, queries not yet enumerated return empty with
         ``exhausted=False``, and everything already emitted is kept.  The
@@ -741,6 +758,48 @@ class BatchPathEnum:
                         graph_id=graph_id)
                 timing.enumerate_seconds += time.perf_counter() - t1
 
+        # fused device phase (DESIGN.md §9): the remaining dfs-plan
+        # queries that resolve to the device backend enumerate together
+        # through fused multi-query launches — one kernel dispatch per
+        # expansion round for the whole micro-batch instead of one
+        # dispatch stream per query.  Shared-walk results, join plans,
+        # ranked batches and host-resolved queries keep the solo path.
+        fused_results: Dict[QueryKey, EnumResult] = {}
+        fused_latency: Dict[QueryKey, float] = {}
+        fused_dispatches = 0
+        if (order is None and self.fused != "off"
+                and self.engine.backend in ("device", "auto")):
+            from ..kernels import ops as kops   # lazy: pallas path only
+            from . import fused as fused_mod
+            from .enumerate import resolve_backend
+            for key in keys:
+                if key in plans_pre:
+                    continue
+                t0 = time.perf_counter()
+                plan = self._plan_for(resolved[key][0], key[3], mode)
+                plan_wall[key] = time.perf_counter() - t0
+                timing.optimize_seconds += plan.optimize_seconds
+                plans_pre[key] = plan
+            elig = [kk for kk in dict.fromkeys(keys)
+                    if kk not in shared_results
+                    and plans_pre[kk].method == "dfs"
+                    and resolve_backend(resolved[kk][0],
+                                        self.engine.backend) == "device"]
+            if len(elig) >= 2:
+                t1 = time.perf_counter()
+                before = kops.device_dispatch_count()
+                res_list = fused_mod.enumerate_fused_device(
+                    [resolved[kk][0] for kk in elig],
+                    chunk_size=self.engine.chunk_size,
+                    count_only=count_only, first_n=first_n,
+                    deadline=deadline)
+                fused_dispatches = kops.device_dispatch_count() - before
+                wall = time.perf_counter() - t1
+                timing.enumerate_seconds += wall
+                fused_results = dict(zip(elig, res_list))
+                share = wall / len(elig)
+                fused_latency = {kk: share for kk in elig}
+
         items: List[Optional[BatchItem]] = [None] * len(keys)
         memo: Dict[QueryKey, BatchItem] = {}
         for pos, key in enumerate(keys):
@@ -759,9 +818,13 @@ class BatchPathEnum:
             else:
                 plan = plan_opt
             res_opt = shared_results.get(key)
+            fused_opt = fused_results.get(key)
             if res_opt is not None:
                 res = res_opt
                 extra = shared_latency[key] + plan_wall.get(key, 0.0)
+            elif fused_opt is not None:
+                res = fused_opt
+                extra = fused_latency[key] + plan_wall.get(key, 0.0)
             else:
                 extra = plan_wall.get(key, 0.0)
                 t1 = time.perf_counter()
@@ -773,7 +836,8 @@ class BatchPathEnum:
                              deduplicated=False,
                              latency_seconds=(time.perf_counter() - t0
                                               + extra),
-                             shared=res_opt is not None)
+                             shared=res_opt is not None,
+                             fused=fused_opt is not None)
             memo[key] = item
             items[pos] = item
 
@@ -784,7 +848,9 @@ class BatchPathEnum:
                            cache_stats=self.cache.stats.delta(stats_before),
                            distinct_queries=len(memo), graph_id=graph_id,
                            sharing_groups=n_groups,
-                           shared_queries=len(shared_results))
+                           shared_queries=len(shared_results),
+                           fused_queries=len(fused_results),
+                           fused_dispatches=fused_dispatches)
 
     def counts(self, graph: Graph, queries: Sequence[Tuple[int, int, int]],
                **kw) -> np.ndarray:

@@ -1,0 +1,50 @@
+"""The single monotonic deadline clock (DESIGN.md §7/§9).
+
+Cooperative deadline truncation crosses layers: serving computes an
+*absolute* deadline at admission (``async_server.submit``), the engine
+threads it untouched through ``BatchPathEnum.run`` into the enumeration
+drivers, and the drivers compare against it between chunks
+(``_drive`` / ``_drive_ranked_*`` / the join ``_expired`` hooks / the
+shared walk).  That contract only works if producer and consumers read
+the *same* clock: a deadline minted from one time origin and compared
+against another is silently never-expiring (truncation disabled) or
+always-expired (every query truncates to nothing) depending on the
+sign of the origin skew.
+
+Historically each side called ``time.perf_counter()`` directly — the
+same source today, but nothing *enforced* it, and any drift (a module
+switching to ``time.monotonic()``, a test freezing one side) would
+split the origins without a single failing assertion.  This module is
+the enforcement point: every deadline is minted by :func:`deadline_in`
+/ :func:`now` and every check goes through :func:`expired`, all reading
+one patchable ``_source``.  The regression suite
+(``tests/test_deadline_clock.py``) skews ``_source`` far from
+``time.perf_counter()`` and asserts truncation still behaves, which
+fails the moment any producer or consumer bypasses this module.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+# The one time source.  Monotonic by contract; tests monkeypatch this to
+# skew or freeze the clock for *both* producers and consumers at once.
+_source: Callable[[], float] = time.perf_counter
+
+
+def now() -> float:
+    """Current time on the deadline clock (absolute, monotonic)."""
+    return _source()
+
+
+def deadline_in(budget_seconds: Optional[float]) -> Optional[float]:
+    """Absolute deadline ``budget_seconds`` from now (None = no deadline)."""
+    if budget_seconds is None:
+        return None
+    return _source() + budget_seconds
+
+
+def expired(deadline: Optional[float]) -> bool:
+    """Has ``deadline`` (absolute, from this clock) passed?  None never
+    expires."""
+    return deadline is not None and _source() >= deadline

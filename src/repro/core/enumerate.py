@@ -42,12 +42,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import os
-import time
 from typing import List, Optional, Tuple
 
 import numpy as np
 
-from . import rank
+from . import clock, rank
 from .graph import PAD
 from .index import LightweightIndex
 
@@ -70,9 +69,15 @@ def resolve_backend(idx: LightweightIndex, backend: Optional[str],
     drains integer hop buckets, DESIGN.md §10); ``auto`` additionally
     requires small k, a dense-enough index, and a real accelerator (or
     ``REPRO_DEVICE_ENUM=force``, which lets CPU CI cover the device leg
-    in interpret mode)."""
+    in interpret mode).  ``REPRO_DEVICE_ENUM=off|0`` is the uniform kill
+    switch (same spelling as ``REPRO_SHARING`` / ``REPRO_PALLAS``): every
+    query runs on the host, including explicit ``backend="device"``
+    requests — the operator escape hatch when a device path misbehaves
+    in production."""
     if backend is not None and backend not in ("host", "device", "auto"):
         raise ValueError(f"unknown backend {backend!r}")
+    if os.environ.get("REPRO_DEVICE_ENUM", "").lower() in ("off", "0"):
+        return "host"
     if backend is None or backend == "host":
         return "host"
     if constraint is not None:
@@ -183,7 +188,7 @@ def enumerate_paths_idx(
     constraints.py) carrying vectorized per-partial state.
 
     ``deadline`` is a cooperative chunk budget: an absolute
-    ``time.perf_counter()`` timestamp checked between chunks.  Once it
+    ``core.clock.now()`` timestamp checked between chunks.  Once it
     passes, the results emitted so far come back with ``exhausted=False``
     — the anytime contract of ``first_n``, keyed on time instead of
     count.  Emitted results are never discarded, so the return value is
@@ -213,6 +218,17 @@ def enumerate_paths_idx(
                          "supported; post-filter instead)")
     resolved = resolve_backend(idx, backend, constraint, order=order)
     if spec is None:
+        if resolved == "device" and constraint is None \
+                and first_n is None and max_results is None \
+                and os.environ.get("REPRO_DEVICE_DEQUE", "").lower() \
+                not in ("off", "0"):
+            # full unconstrained device enumerations keep the work deque
+            # resident on device (DESIGN.md §9); anytime contracts
+            # (first_n / max_results) need per-chunk host decisions and
+            # stay on the host-looped driver below
+            return _drive_resident(idx, chunk_size=chunk_size,
+                                   count_only=count_only,
+                                   deadline=deadline)
         step = _device_step(idx) if resolved == "device" \
             else _host_step(idx, constraint)
         return _drive(idx, step, chunk_size=chunk_size,
@@ -245,19 +261,33 @@ def _drive(idx: LightweightIndex, step, chunk_size: int, count_only: bool,
     survivors could never be extended.
     """
     k, s = idx.k, idx.s
-    stats = EnumStats()
-    out_paths: List[np.ndarray] = []
-    out_lens: List[np.ndarray] = []
-    count = 0
-
     root = np.full((1, k + 1), PAD, dtype=np.int32)
     root[0, 0] = s
     cstate0 = constraint.init(1) if constraint is not None else None
     # LIFO deque of (paths, depth, constraint_state) — deepest first = DFS
     work: List[Tuple[np.ndarray, int, object]] = [(root, 0, cstate0)]
+    return _drive_from(idx, step, work, EnumStats(), [], [], 0,
+                       chunk_size=chunk_size, count_only=count_only,
+                       first_n=first_n, max_results=max_results,
+                       constraint=constraint, deadline=deadline)
+
+
+def _drive_from(idx: LightweightIndex, step,
+                work: List[Tuple[np.ndarray, int, object]],
+                stats: EnumStats, out_paths: List[np.ndarray],
+                out_lens: List[np.ndarray], count: int, chunk_size: int,
+                count_only: bool, first_n: Optional[int],
+                max_results: Optional[int], constraint,
+                deadline: Optional[float]) -> EnumResult:
+    """`_drive`'s loop, resumable from mid-walk state — the entry point
+    both for a fresh walk (`_drive` seeds the root) and for the
+    device-resident deque's capacity-stall fallback (`_drive_resident`
+    rebuilds ``work``/``stats``/outputs from the arena and continues
+    here, so a stalled walk finishes with identical semantics)."""
+    k = idx.k
 
     while work:
-        if deadline is not None and time.perf_counter() >= deadline:
+        if deadline is not None and clock.expired(deadline):
             return _finalize(idx, out_paths, out_lens, count, stats,
                              exhausted=False)
         paths, depth, cstate = work.pop()
@@ -422,6 +452,94 @@ def _device_step(idx: LightweightIndex):
     return step
 
 
+def _drive_resident(idx: LightweightIndex, chunk_size: int,
+                    count_only: bool,
+                    deadline: Optional[float]) -> EnumResult:
+    """Device-resident deque driver (DESIGN.md §9, the tentpole of the
+    device enumeration column): the LIFO chunk stack lives in a device
+    arena and ``ops.frontier_deque_round`` runs many pop→expand→push
+    iterations per host round-trip — the host syncs only to drain the
+    round's emitted paths, fold its counters into ``EnumStats`` and
+    check the cooperative ``deadline``.
+
+    Semantics are `_drive` + `_device_step` bit-for-bit on every full
+    enumeration: the in-arena push replicates the driver's chunk_size
+    split and reversed piece order, so the pop sequence (and therefore
+    ``stats.chunks`` and every Fig.-6 counter) is identical, and
+    exhausted results pass through the same canonical sort.  Two
+    escapes return to the host-looped driver: an index whose padded
+    ``rows × fan-out`` rectangle exceeds the slot budget never enters
+    (the host path segments wide chunks; the resident kernel cannot),
+    and a capacity stall mid-walk (arena/emit/meta guard trips with
+    chunks still queued) rebuilds the host work list from the arena and
+    resumes `_drive_from` — same walk, same stats, different engine.
+    ``REPRO_DEVICE_DEQUE=off|0`` disables the resident path entirely.
+    """
+    from ..kernels import ops as kops   # lazy: pallas only on this path
+    k, s, t = idx.k, idx.s, idx.t
+    max_deg = int((idx.fwd_end[:, k] - idx.fwd_begin).max(initial=0))
+    cfg = kops.deque_config(k + 1, chunk_size, max_deg)
+    if max_deg == 0 or cfg.cap > DEVICE_SLOT_BUDGET \
+            or chunk_size > cfg.arena_cap:
+        return _drive(idx, _device_step(idx), chunk_size=chunk_size,
+                      count_only=count_only, first_n=None,
+                      max_results=None, constraint=None, deadline=deadline)
+
+    dev = idx.device_arrays()
+    stats = EnumStats()
+    out_paths: List[np.ndarray] = []
+    out_lens: List[np.ndarray] = []
+    count = 0
+    root = np.full((k + 1,), PAD, dtype=np.int32)
+    root[0] = s
+    arena, m_depth, m_len, top, n_chunks = \
+        kops.frontier_deque_init(root, cfg=cfg)
+
+    while True:
+        if deadline is not None and clock.expired(deadline):
+            return _finalize(idx, out_paths, out_lens, count, stats,
+                             exhausted=False)
+        arena, m_depth, m_len, top, n_chunks, emitbuf, emitlen, n_emit, \
+            counters, pops = kops.frontier_deque_round(
+                arena, m_depth, m_len, top, n_chunks, dev.begin, dev.end,
+                dev.dst, t, cfg=cfg)
+        stats.chunks += int(pops)
+        edges, partials, invalid, _ = (int(x) for x in np.asarray(counters))
+        stats.edges_accessed += edges
+        stats.partials_generated += partials
+        stats.invalid_partials += invalid
+        ne = int(n_emit)
+        if ne:
+            count += ne
+            stats.results += ne
+            if not count_only:
+                out_paths.append(np.asarray(emitbuf[:ne]))
+                out_lens.append(np.asarray(emitlen[:ne]))
+        nc = int(n_chunks)
+        if nc == 0:
+            break
+        if int(pops) == 0:
+            # capacity stall: rebuild the host work list (meta slots
+            # bottom→top; list.pop() then takes the top chunk first,
+            # preserving the LIFO order) and finish on the host loop
+            rows = np.asarray(arena[:int(top)])
+            lens = np.asarray(m_len[:nc]).astype(np.int64)
+            depths = np.asarray(m_depth[:nc])
+            starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            work: List[Tuple[np.ndarray, int, object]] = [
+                (rows[starts[j]:starts[j] + lens[j]], int(depths[j]), None)
+                for j in range(nc)]
+            return _drive_from(idx, _device_step(idx), work, stats,
+                               out_paths, out_lens, count,
+                               chunk_size=chunk_size,
+                               count_only=count_only, first_n=None,
+                               max_results=None, constraint=None,
+                               deadline=deadline)
+
+    return _finalize(idx, out_paths, out_lens, count, stats,
+                     exhausted=True, canonical=True)
+
+
 def _drive_ranked_heap(idx: LightweightIndex, spec: "rank.RankSpec",
                        chunk_size: int, count_only: bool,
                        first_n: Optional[int], max_results: Optional[int],
@@ -475,7 +593,7 @@ def _drive_ranked_heap(idx: LightweightIndex, spec: "rank.RankSpec",
         return res_key[:2] < part_key[:2]
 
     while partials or results:
-        if deadline is not None and time.perf_counter() >= deadline:
+        if deadline is not None and clock.expired(deadline):
             return _finalize(idx, out_paths, out_lens, count, stats,
                              exhausted=False)
         if results and (not partials or gated(results[0], partials[0])):
@@ -570,7 +688,7 @@ def _drive_ranked_buckets(idx: LightweightIndex, step, chunk_size: int,
         pend = buckets.pop(b)
         stratum: List[np.ndarray] = []
         while pend:
-            if deadline is not None and time.perf_counter() >= deadline:
+            if deadline is not None and clock.expired(deadline):
                 return _finalize(idx, out_paths, out_lens, count, stats,
                                  exhausted=False)
             rows, depth = pend.pop()

@@ -7,12 +7,25 @@ Two estimators, exactly as the paper:
   (it gates a host-side plan decision, so it never leaves the host).
 
 * ``walk_count_dp`` — the full-fledged estimator, Eq. 6/7 via the DP of
-  Algorithm 5.  On TPU this is k edge-parallel plus-times passes over the
-  index-filtered edge list (a counting-semiring SpMV); here the host build
-  runs in float64 (walk counts overflow int64 on the paper's own workloads,
-  Table 6 reports 1e10+).  The (t,t) self-loop of the relation construction
-  (§3.1 rule 3) is applied explicitly so that |Q[i:k]| and |Q[0:i]| count
-  padded tuples exactly like the join model.
+  Algorithm 5.  The host build runs in float64 (walk counts overflow int64
+  on the paper's own workloads, Table 6 reports 1e10+).  The (t,t)
+  self-loop of the relation construction (§3.1 rule 3) is applied
+  explicitly so that |Q[i:k]| and |Q[0:i]| count padded tuples exactly
+  like the join model.
+
+  ``backend="device"`` runs the same DP through the Pallas semiring
+  kernels (DESIGN.md §9): the level masks come from min-plus BFS
+  relaxations over the dense index adjacency (kernels/ops.bfs_dense —
+  exact on index vertices because shortest s→v / v→t paths stay inside
+  the light-weight index, §3.2), and each DP level is one
+  counting-semiring matmul (kernels/ops.counting_spmm).  The matmul
+  accumulates in f32, which is exact only for integers below 2^24
+  (EXACT_COUNT_MAX) — any level value at or past it may have been
+  rounded, so the device build *promotes itself to the host float64 DP*
+  whenever a count reaches the bound (``WalkCountDP.backend_used``
+  records which build produced the numbers).  Below the bound the device
+  DP is bit-identical to the host DP: every partial sum is an exact f32
+  integer, so accumulation order cannot matter.
 
 Exactness contract (tested): run to completion, ``dp.q_total`` equals
 |W(s,t,k,G)| — the estimator is exact on *walks*; the path/walk gap is the
@@ -25,6 +38,17 @@ import dataclasses
 import numpy as np
 
 from .index import LightweightIndex
+
+# f32 counting-semiring accumulation is exact strictly below 2^24: all DP
+# values are non-negative integers and partial sums are bounded by the
+# final sum, so a device build whose levels all stay below this bound is
+# bit-exact; a level that *reaches* it may already have rounded (a true
+# 2^24+1 rounds to 2^24), hence the >= promotion test.
+EXACT_COUNT_MAX = float(1 << 24)
+
+# dense-tile ceiling for the device DP: the kernels run on an (n, n)
+# dense adjacency, so past this the host edge-list scatter wins
+DEVICE_DP_MAX_N = 2048
 
 
 def preliminary_estimate(index: LightweightIndex) -> float:
@@ -52,6 +76,10 @@ class WalkCountDP:
     t_dfs: float          # Σ_{1≤i≤k} |Q[0:i]|   (§6.3 cost of Alg. 4's order)
     t_join: float         # |Q| + Σ… (§6.3 cost of the bushy plan at i*)
     q_total: float        # |Q| = δ_W
+    # which build produced the numbers: "host" (float64 edge-list DP) or
+    # "device" (semiring kernels; promotes itself back to "host" when a
+    # count reaches EXACT_COUNT_MAX, so "device" certifies exactness)
+    backend_used: str = "host"
 
     @property
     def est_results(self) -> float:
@@ -65,16 +93,146 @@ def _level_masks(index: LightweightIndex) -> np.ndarray:
             & (index.dist_t[None, :] <= (k - ii)[:, None]))
 
 
-def walk_count_dp(index: LightweightIndex) -> WalkCountDP:
+def _index_edge_list(index: LightweightIndex):
+    """Index edge list (eu, ev) as int64 arrays — any order works for the
+    scatter/matmul; budgets are enforced per level with the dist arrays,
+    mirroring I_t(v, k-i-1) / I_s(v, i-1)."""
+    eu = np.repeat(np.arange(index.n, dtype=np.int64),
+                   (index.fwd_end[:, index.k]
+                    - index.fwd_begin).astype(np.int64))
+    ev = index.fwd_dst.astype(np.int64)
+    return eu, ev
+
+
+def _finish_dp(k: int, c_to: np.ndarray, c_from: np.ndarray, t: int,
+               backend_used: str) -> WalkCountDP:
+    """Derive the §6.3 cost model from the level tables.  Shared by the
+    host and device builds so that equal tables give a bit-identical
+    WalkCountDP regardless of which backend produced them."""
+    q_prefix = c_from.sum(axis=1)      # |Q[0:i]| = Σ_{v∈I(i)} c_i^0(v)
+    q_suffix = c_to.sum(axis=1)        # |Q[i:k]| = Σ_{v∈I(i)} c_k^i(v)
+    cut = int(np.argmin(q_prefix + q_suffix))
+    q_total = float(c_from[k, t])
+    t_dfs = float(q_prefix[1:].sum())
+    t_join = float(q_total + q_prefix[1:cut + 1].sum() + q_suffix[cut:].sum())
+    return WalkCountDP(k=k, c_to=c_to, c_from=c_from, q_prefix=q_prefix,
+                       q_suffix=q_suffix, cut=cut, t_dfs=t_dfs, t_join=t_join,
+                       q_total=q_total, backend_used=backend_used)
+
+
+def device_index_distances(index: LightweightIndex):
+    """(dist_s, dist_t) derived *on device* by min-plus BFS relaxation
+    (kernels/ops.bfs_dense) over the dense index adjacency, int64 with the
+    index's own k+1 unreachable sentinel.
+
+    Exactness (the §3.2 closure argument, asserted by the parity suite):
+    for any index vertex v, some shortest s→v path lies entirely inside
+    the index — each vertex x_i at position i of it has
+    dist_s(x_i) = i and dist_t(x_i) ≤ dist_s(v) - i + dist_t(v), so
+    x_i and the edge to its successor satisfy the index criterion.
+    Hence k rounds of min-plus over index edges reproduce the graph BFS
+    distances for every index vertex (and only overestimate — to the
+    k+1 sentinel — on vertices outside the index, where every DP level
+    mask is empty on both clocks anyway)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    idx = index
+    n, k, s, t = idx.n, idx.k, idx.s, idx.t
+    eu, ev = _index_edge_list(idx)
+    inf = 1e9
+    wadj = np.full((n, n), inf, dtype=np.float32)
+    wadj[eu, ev] = 1.0                    # multi-edges collapse for BFS
+    dd_s = kops.bfs_dense(jnp.asarray(wadj), s, k, inf=inf)
+    dd_t = kops.bfs_dense(jnp.asarray(np.ascontiguousarray(wadj.T)), t, k,
+                          inf=inf)
+    dist_s = np.minimum(np.asarray(dd_s), k + 1).astype(np.int64)
+    dist_t = np.minimum(np.asarray(dd_t), k + 1).astype(np.int64)
+    return dist_s, dist_t
+
+
+def _walk_count_dp_device(index: LightweightIndex):
+    """Alg. 5 through the Pallas semiring kernels (DESIGN.md §9): level
+    masks from min-plus BFS distances, one counting-semiring matmul per
+    DP level, f32 accumulation.  Returns None when any level count
+    reaches EXACT_COUNT_MAX — the caller promotes to the host float64
+    build (the overflow bugfix: f32 silently loses exactness past 2^24,
+    so past it the device numbers are not trusted)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    idx = index
+    n, k, t = idx.n, idx.k, idx.t
+    eu, ev = _index_edge_list(idx)
+    dist_s, dist_t = device_index_distances(idx)
+
+    # dense counting-semiring adjacency: A[u, v] = #edges u -> v (parallel
+    # edges contribute walks separately, exactly like the host scatter)
+    amat = np.zeros((n, n), dtype=np.float32)
+    np.add.at(amat, (eu, ev), 1.0)
+    a_fwd = jnp.asarray(amat)                              # for A @ x
+    a_rev = jnp.asarray(np.ascontiguousarray(amat.T))      # for Aᵀ @ x
+
+    ii = np.arange(k + 1)
+    lvl_np = ((dist_s[None, :] <= ii[:, None])
+              & (dist_t[None, :] <= (k - ii)[:, None]))
+    lvl = jnp.asarray(lvl_np)
+    dt_j = jnp.asarray(dist_t)
+    ds_j = jnp.asarray(dist_s)
+
+    # ---- backward: c_to[i] = c_k^i — one counting SpMM per level ----
+    cur = jnp.where(lvl[k], 1.0, 0.0).astype(a_fwd.dtype)
+    c_to_levels = [cur]
+    for i in range(k - 1, -1, -1):
+        vec = jnp.where(dt_j <= (k - i - 1), cur, 0.0)     # I_t budget
+        contrib = kops.counting_spmm(a_fwd, vec[:, None])[:, 0]
+        contrib = contrib.at[t].add(cur[t])                # (t,t) self-loop
+        cur = jnp.where(lvl[i], contrib, 0.0)
+        c_to_levels.append(cur)
+    c_to = np.stack([np.asarray(x) for x in reversed(c_to_levels)]
+                    ).astype(np.float64)
+
+    # ---- forward: c_from[i] = c_i^0 — mirrored through Aᵀ ----
+    cur = jnp.where(lvl[0], 1.0, 0.0).astype(a_fwd.dtype)
+    c_from_levels = [cur]
+    for i in range(1, k + 1):
+        vec = jnp.where(ds_j <= (i - 1), cur, 0.0)         # I_s budget
+        contrib = kops.counting_spmm(a_rev, vec[:, None])[:, 0]
+        contrib = contrib.at[t].add(cur[t])                # (t,t) self-loop
+        cur = jnp.where(lvl[i], contrib, 0.0)
+        c_from_levels.append(cur)
+    c_from = np.stack([np.asarray(x) for x in c_from_levels]
+                      ).astype(np.float64)
+
+    # overflow fence: every intermediate partial sum is bounded by some
+    # level value (non-negative terms), so scanning the level tables
+    # covers the whole computation
+    if max(c_to.max(initial=0.0), c_from.max(initial=0.0)) \
+            >= EXACT_COUNT_MAX:
+        return None
+    return _finish_dp(k, c_to, c_from, t, backend_used="device")
+
+
+def walk_count_dp(index: LightweightIndex,
+                  backend: str | None = None) -> WalkCountDP:
+    """Alg. 5 / Eq. 6-7.  ``backend`` picks the build: None/"host" is the
+    float64 edge-list DP; "device" runs the Pallas semiring kernels and
+    silently promotes back to the host build on f32 overflow (the
+    ``backend_used`` field says which one produced the numbers).  Both
+    builds are bit-identical whenever the device build is returned."""
+    if backend not in (None, "host", "device"):
+        raise ValueError(f"unknown walk_count_dp backend {backend!r}")
+    if backend == "device":
+        dp = _walk_count_dp_device(index)
+        if dp is not None:
+            return dp
     idx = index
     n, k, s, t = idx.n, idx.k, idx.s, idx.t
     lvl = _level_masks(idx)
 
-    # index edge list (any order works for scatter-add); budgets are enforced
-    # per-level with the dist arrays, mirroring I_t(v, k-i-1) / I_s(v, i-1).
-    eu = np.repeat(np.arange(n, dtype=np.int64),
-                   (idx.fwd_end[:, k] - idx.fwd_begin).astype(np.int64))
-    ev = idx.fwd_dst.astype(np.int64)
+    eu, ev = _index_edge_list(idx)
     du = idx.dist_s[eu].astype(np.int64)
     dv = idx.dist_t[ev].astype(np.int64)
 
@@ -100,14 +258,4 @@ def walk_count_dp(index: LightweightIndex) -> WalkCountDP:
         contrib[t] += prv[t]           # virtual (t,t) self-loop
         c_from[i] = np.where(lvl[i], contrib, 0.0)
 
-    q_prefix = c_from.sum(axis=1)      # |Q[0:i]| = Σ_{v∈I(i)} c_i^0(v)
-    q_suffix = c_to.sum(axis=1)        # |Q[i:k]| = Σ_{v∈I(i)} c_k^i(v)
-    cut = int(np.argmin(q_prefix + q_suffix))
-    q_total = float(c_from[k, t])
-
-    # §6.3 cost comparison
-    t_dfs = float(q_prefix[1:].sum())
-    t_join = float(q_total + q_prefix[1:cut + 1].sum() + q_suffix[cut:].sum())
-    return WalkCountDP(k=k, c_to=c_to, c_from=c_from, q_prefix=q_prefix,
-                       q_suffix=q_suffix, cut=cut, t_dfs=t_dfs, t_join=t_join,
-                       q_total=q_total)
+    return _finish_dp(k, c_to, c_from, t, backend_used="host")

@@ -25,14 +25,14 @@ that the DFS backends produce.
 from __future__ import annotations
 
 import dataclasses
-import time
+import os
 from typing import List, Optional
 
 import numpy as np
 
-from . import rank
-from .enumerate import (EngineLimit, EnumResult, EnumStats, _finalize,
-                        _trim_to_first_n)
+from . import clock, estimator, rank
+from .enumerate import (DEVICE_AUTO_MIN_EDGES, EngineLimit, EnumResult,
+                        EnumStats, _finalize, _trim_to_first_n)
 from .graph import PAD
 from .index import LightweightIndex
 
@@ -42,6 +42,53 @@ class JoinStats(EnumStats):
     ra_size: int = 0
     rb_size: int = 0
     pairs: int = 0
+
+
+def resolve_join_backend(idx: LightweightIndex,
+                         backend: Optional[str]) -> str:
+    """The join/count column of the §9 fallback matrix: where the
+    hop-count DP (Alg. 5, the join plan's cut derivation) runs.
+
+    ``host``/None is the float64 edge-list DP.  ``device`` runs the
+    Pallas semiring kernels (min-plus BFS level masks + counting-semiring
+    matmul per level) but falls back to the host for indexes wider than
+    the dense-tile ceiling (estimator.DEVICE_DP_MAX_N — the kernels work
+    on an (n, n) dense adjacency).  ``auto`` additionally requires a
+    dense-enough index and a real accelerator (or
+    ``REPRO_DEVICE_ENUM=force`` for CPU CI).  ``REPRO_DEVICE_ENUM=off|0``
+    is the same uniform kill switch as the enumeration column.  Note the
+    resolved backend only picks *where the numbers are computed*: the
+    device DP promotes itself back to the host build on f32 overflow
+    (estimator.EXACT_COUNT_MAX), so plans are identical either way."""
+    if backend is not None and backend not in ("host", "device", "auto"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if os.environ.get("REPRO_DEVICE_ENUM", "").lower() in ("off", "0"):
+        return "host"
+    if backend is None or backend == "host":
+        return "host"
+    if idx.n > estimator.DEVICE_DP_MAX_N:
+        return "host"
+    if backend == "device":
+        return "device"
+    # backend == "auto"
+    if idx.num_index_edges < DEVICE_AUTO_MIN_EDGES:
+        return "host"
+    if os.environ.get("REPRO_DEVICE_ENUM") == "force":
+        return "device"
+    import jax
+    return "device" if jax.default_backend() != "cpu" else "host"
+
+
+def hop_count_dp(idx: LightweightIndex,
+                 backend: Optional[str] = None) -> estimator.WalkCountDP:
+    """The join/count plan's hop-count derivation (Alg. 5 / Eq. 6-7)
+    behind the §9 ``host|device|auto`` knob: resolves the backend with
+    `resolve_join_backend` and runs estimator.walk_count_dp there.  The
+    returned DP is bit-identical across backends — the device build is
+    exact below 2^24 and promotes itself to the host build past it
+    (``dp.backend_used`` records which one ran)."""
+    return estimator.walk_count_dp(
+        idx, backend=resolve_join_backend(idx, backend))
 
 
 def _expand_to_width(idx: LightweightIndex, start_vertices: np.ndarray,
@@ -119,7 +166,7 @@ def enumerate_paths_join(
     stops after exactly ``first_n`` results with ``exhausted=False`` — the
     same truncation contract as enumerate_paths_idx.
 
-    ``deadline`` (absolute ``time.perf_counter()``) is the cooperative
+    ``deadline`` (absolute ``core.clock.now()``) is the cooperative
     time analogue, checked at the join's natural chunk boundaries: before
     each half expansion and between cut-key groups.  Past it, the paths
     joined so far return with ``exhausted=False``.
@@ -145,7 +192,7 @@ def enumerate_paths_join(
     stats = JoinStats()
 
     def _expired() -> bool:
-        return deadline is not None and time.perf_counter() >= deadline
+        return deadline is not None and clock.expired(deadline)
 
     if _expired():
         return _finalize(idx, [], [], 0, stats, exhausted=False)
@@ -284,7 +331,7 @@ def _join_ranked(idx: LightweightIndex, cut: int, spec: "rank.RankSpec",
     stats = JoinStats()
 
     def _expired() -> bool:
-        return deadline is not None and time.perf_counter() >= deadline
+        return deadline is not None and clock.expired(deadline)
 
     if _expired():
         return _finalize(idx, [], [], 0, stats, exhausted=False)

@@ -45,10 +45,12 @@ class QueryOutput:
 class PathEnum:
     """Engine facade.  mode: "auto" (paper's optimizer), "dfs", "join".
 
-    ``backend`` selects the DFS expansion engine (DESIGN.md §9):
-    "host" (numpy, default), "device" (Pallas frontier kernel) or "auto"
-    (small-k/dense-frontier rule).  Join plans always enumerate on the
-    host — the backend only steers IDX-DFS.
+    ``backend`` selects where device-capable stages run (DESIGN.md §9):
+    "host" (numpy, default), "device" (Pallas kernels) or "auto".  It
+    steers both the IDX-DFS frontier expansion (frontier kernel) and the
+    join/count plan's hop-count DP (semiring kernels, via
+    join.hop_count_dp); the join's sort-merge enumeration itself stays on
+    the host.  Results and plans are bit-identical across backends.
     """
 
     def __init__(self, tau: float = DEFAULT_TAU, chunk_size: int = 16384,
@@ -83,7 +85,7 @@ class PathEnum:
         the lexicographic vertex sequence as tie-break, so every
         mode/backend returns the identical ordered list.  Under ranked
         order, ``first_n`` means the top-n and a ``deadline`` (absolute
-        ``time.perf_counter()``) truncation is a rank-optimal prefix.
+        ``core.clock.now()``) truncation is a rank-optimal prefix.
         """
         if k < 2:
             raise ValueError("paper assumes k >= 2")
@@ -93,13 +95,16 @@ class PathEnum:
         timing.index_seconds = time.perf_counter() - t0
 
         if mode == "auto":
-            plan = planner_mod.plan_query(idx, tau=self.tau)
+            plan = planner_mod.plan_query(idx, tau=self.tau,
+                                          backend=backend or self.backend)
         elif mode == "dfs":
             plan = Plan(method="dfs", cut=None, preliminary=-1.0,
                         used_full_estimator=False)
         elif mode == "join":
             if cut is None:
-                dp_plan = planner_mod.plan_query(idx, tau=-1.0)
+                dp_plan = planner_mod.plan_query(idx, tau=-1.0,
+                                                 backend=backend
+                                                 or self.backend)
                 cut = dp_plan.cut if dp_plan.cut else max(1, k // 2)
             plan = Plan(method="join", cut=cut, preliminary=-1.0,
                         used_full_estimator=True)

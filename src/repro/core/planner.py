@@ -18,6 +18,7 @@ from typing import Optional
 
 from . import estimator as est
 from .index import LightweightIndex
+from .join import hop_count_dp
 
 DEFAULT_TAU = 1e5
 
@@ -35,7 +36,15 @@ class Plan:
     optimize_seconds: float = 0.0
 
 
-def plan_query(index: LightweightIndex, tau: float = DEFAULT_TAU) -> Plan:
+def plan_query(index: LightweightIndex, tau: float = DEFAULT_TAU,
+               backend: Optional[str] = None) -> Plan:
+    """Two-phase plan for one query.  ``backend`` (host|device|auto, §9)
+    picks where the full-fledged DP runs when the τ gate trips — the
+    device leg is the semiring-kernel build of join.hop_count_dp, which
+    is bit-identical to the host build (it promotes itself to the host
+    on f32 overflow), so the *plan* never depends on the backend, only
+    the derivation cost does.  The O(k²) preliminary estimate is host
+    scalar math always."""
     t0 = time.perf_counter()
     t_hat = est.preliminary_estimate(index)
     if t_hat <= tau:
@@ -43,7 +52,7 @@ def plan_query(index: LightweightIndex, tau: float = DEFAULT_TAU) -> Plan:
                     used_full_estimator=False,
                     optimize_seconds=time.perf_counter() - t0)
 
-    dp = est.walk_count_dp(index)
+    dp = hop_count_dp(index, backend)
     cut = dp.cut
     # a cut at the boundary degenerates to the left-deep plan
     if cut <= 0 or cut >= index.k or dp.t_dfs <= dp.t_join:

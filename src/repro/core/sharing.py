@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import clock
 from .enumerate import EnumResult, EnumStats, EngineLimit, _finalize, \
     _trim_to_first_n
 from .graph import Graph, PAD
@@ -486,7 +487,7 @@ def _walk_group(merged: MergedGroupIndex, specs: Sequence[_MemberSpec],
         [(np.zeros(1, np.int64), root_rows, np.ones((1, M), bool), 0)]
 
     while work:
-        if deadline is not None and time.perf_counter() >= deadline:
+        if deadline is not None and clock.expired(deadline):
             raise SharingFallback("deadline expired during shared walk")
         ids, rows, vmat, depth = work.pop()
         last = rows[:, depth].astype(np.int64)
@@ -645,7 +646,7 @@ def _replay_dfs(cap: _GroupCapture, slot: int, idx: LightweightIndex,
     work: List[Tuple[np.ndarray, int]] = [(np.zeros(1, np.int64), 0)]
 
     while work:
-        if deadline is not None and time.perf_counter() >= deadline:
+        if deadline is not None and clock.expired(deadline):
             return _finalize(idx, out_paths, out_lens, count, stats,
                              exhausted=False)
         ids, depth = work.pop()

@@ -92,6 +92,140 @@ def _frontier_kernel(meta_ref, paths_ref, begin_ref, endb_ref, dst_ref,
     counters_ref[...] += jnp.stack([edges, edges, invalid, jnp.int32(0)])
 
 
+def _frontier_fused_kernel(tvec_ref, depthv_ref, rank_ref, paths_ref,
+                           begin_ref, endb_ref, dst_ref,
+                           vnew_ref, emit_ref, cont_ref, counters_ref, *,
+                           k1: int, max_deg: int, n: int, mfm: int,
+                           m: int, pad: int):
+    """One row-block of one *fused* hop: many queries, one launch.
+
+    The single-query kernel above expands one chunk of one query; this
+    variant packs chunks from ``m`` queries (an async micro-batch, or a
+    merged sharing group's member views) into one row matrix, tagged by
+    member rank, and expands them all in a single dispatch (DESIGN.md
+    §9).  Per-member state rides flattened tables indexed by rank:
+
+      * ``tvec``/``depthv`` (m,) — each member's target and the common
+        depth of its packed chunk (all rows of one chunk share a depth);
+      * ``rank`` (BR,) — each row's member; PAD rows carry rank 0 and
+        stay inert (their path row is all PAD, so ``valid`` is False);
+      * ``begin``/``endb`` (m·n,) — each member's offset vectors,
+        ``endb`` pre-sliced to the member's budget column b = k−depth−1
+        by the wrapper; row r gathers at ``rank_r·n + last_r``;
+      * ``dst`` (m·mfm,) — each member's adjacency slab, padded to the
+        common ``mfm``; candidate positions clip *within* the member's
+        slab before the rank offset is added, so no row can read a
+        neighbor member's edges.
+
+    Masking, dedup and the Fig.-6 counter semantics are the single-query
+    kernel's, applied per row with per-row depth/t — except counters
+    accumulate into an (m, 4) matrix, one row per member, via a rank
+    one-hot, so the host driver can credit each query's ``EnumStats``
+    exactly as if it had run solo (tests/test_fused_launch.py pins the
+    bit-parity).
+    """
+    rank = rank_ref[...]                                    # (BR,)
+    depth = jnp.take(depthv_ref[...], rank)                 # (BR,)
+    t = jnp.take(tvec_ref[...], rank)                       # (BR,)
+    paths = paths_ref[...]                                  # (BR, k1)
+    # per-row column gather, unrolled over the static path width
+    last = jnp.full(rank.shape, pad, jnp.int32)
+    for c in range(k1):
+        last = jnp.where(depth == jnp.int32(c), paths[:, c], last)
+    valid = last != pad
+    lastc = jnp.where(valid, last, 0)
+    flat = rank * jnp.int32(n) + lastc
+    begin = jnp.take(begin_ref[...], flat)                  # (BR,)
+    end = jnp.take(endb_ref[...], flat)
+    cnt = jnp.where(valid, end - begin, 0)                  # |I_t(v, b)|
+    slot = jax.lax.broadcasted_iota(jnp.int32, (paths.shape[0], max_deg), 1)
+    in_range = slot < cnt[:, None]
+    pos = (jnp.clip(begin[:, None] + slot, 0, mfm - 1)
+           + rank[:, None] * jnp.int32(mfm))
+    vnew = jnp.take(dst_ref[...], pos)                      # (BR, max_deg)
+
+    dup = jnp.zeros_like(in_range)
+    for c in range(k1):
+        on_prefix = jnp.int32(c) <= depth
+        dup = dup | (on_prefix[:, None] & (paths[:, c][:, None] == vnew))
+
+    is_t = vnew == t[:, None]
+    emit = in_range & ~dup & is_t
+    cont = in_range & ~dup & ~is_t
+
+    alive = (emit | cont).any(axis=1)
+    dead = valid & ~alive
+    edges_row = cnt                                         # (BR,)
+    invalid_row = (jnp.sum((dup & in_range).astype(jnp.int32), axis=1)
+                   + dead.astype(jnp.int32))
+
+    vnew_ref[...] = jnp.where(emit | cont, vnew, pad)
+    emit_ref[...] = emit.astype(jnp.int32)
+    cont_ref[...] = cont.astype(jnp.int32)
+
+    # per-member counter rows via a rank one-hot (PAD rows land on
+    # member 0 but contribute zeros: cnt == 0 and dead is False)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (paths.shape[0], m), 1)
+              == rank[:, None])
+    edges_m = jnp.sum(jnp.where(onehot, edges_row[:, None], 0), axis=0)
+    invalid_m = jnp.sum(jnp.where(onehot, invalid_row[:, None], 0), axis=0)
+    zeros_m = jnp.zeros_like(edges_m)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counters_ref[...] = jnp.zeros_like(counters_ref)
+
+    counters_ref[...] += jnp.stack([edges_m, edges_m, invalid_m, zeros_m],
+                                   axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("max_deg", "interpret"))
+def frontier_fused_masks(paths, rank, tvec, depthv, begin, endb, dst, *,
+                         max_deg: int, interpret: bool = False):
+    """Raw fused-kernel entry: masks + per-member counters, no compaction.
+
+    paths (C, k1max) int32 rows packed member-rank-ascending (PAD rows
+    inert); rank (C,) int32; tvec/depthv (m,) int32; begin/endb (m·n,)
+    int32; dst (m·mfm,) int32.  Returns (vnew, emit, cont, counters)
+    with counters (m, 4) — see ``_frontier_fused_kernel`` for layout.
+    """
+    C, k1 = paths.shape
+    m = tvec.shape[0]
+    n = begin.shape[0] // m
+    mfm = dst.shape[0] // m
+    br = C if C < BLOCK_ROWS else BLOCK_ROWS
+    assert C % br == 0, f"pad chunk rows C={C} to a multiple of {br}"
+    grid = (C // br,)
+    kern = functools.partial(_frontier_fused_kernel, k1=k1, max_deg=max_deg,
+                             n=n, mfm=mfm, m=m, pad=PAD)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),            # tvec
+            pl.BlockSpec((m,), lambda i: (0,)),            # depthv
+            pl.BlockSpec((br,), lambda i: (i,)),           # rank
+            pl.BlockSpec((br, k1), lambda i: (i, 0)),
+            pl.BlockSpec((m * n,), lambda i: (0,)),
+            pl.BlockSpec((m * n,), lambda i: (0,)),
+            pl.BlockSpec((m * mfm,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((br, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((br, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((m, 4), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((C, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((C, max_deg), jnp.int32),
+            jax.ShapeDtypeStruct((m, 4), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tvec, depthv, rank, paths, begin, endb, dst)
+
+
 @functools.partial(jax.jit, static_argnames=("max_deg", "interpret"))
 def frontier_expand_masks(paths, begin, endb, dst, meta, *, max_deg: int,
                           interpret: bool = False):

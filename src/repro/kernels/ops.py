@@ -9,6 +9,7 @@ Set REPRO_PALLAS=off to route every op to its pure-jnp reference instead
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 
@@ -20,8 +21,25 @@ from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .frontier_expand import PAD, frontier_expand_masks as _frontier_pallas
+from .frontier_expand import frontier_fused_masks as _frontier_fused_pallas
 from .semiring_spmm import BLOCK, counting_spmm as _counting_pallas
 from .semiring_spmm import minplus_spmv as _minplus_pallas
+
+# Monotone count of frontier-expansion device dispatches (single-query,
+# fused and deque-round launches alike).  The fused-launch and deque
+# tests assert on deltas of this counter — it is the ground truth for
+# "one dispatch per expansion round" (DESIGN.md §9).
+_dispatch_count: int = 0
+
+
+def device_dispatch_count() -> int:
+    """Total frontier-expansion kernel dispatches since process start."""
+    return _dispatch_count
+
+
+def _count_dispatch() -> None:
+    global _dispatch_count
+    _dispatch_count += 1
 
 
 def _interpret() -> bool:
@@ -190,11 +208,306 @@ def frontier_expand(
     if C != rows:
         paths = np.pad(paths, ((0, C - rows), (0, 0)), constant_values=PAD)
     meta = jnp.asarray([depth, t], jnp.int32)
+    _count_dispatch()
     return _frontier_expand_jit(
         jnp.asarray(paths), jnp.asarray(fwd_begin), jnp.asarray(fwd_end),
         jnp.asarray(fwd_dst), meta, max_deg=_next_pow2(max_deg),
         interpret=_interpret(), use_ref=not _enabled(),
         want_cont=want_cont)
+
+
+def _children_fused(paths: jnp.ndarray, vflat: jnp.ndarray,
+                    idxs: jnp.ndarray, depth_rows: jnp.ndarray,
+                    max_deg: int) -> jnp.ndarray:
+    """`_children` with a per-parent-row depth vector (fused launches mix
+    members whose chunks sit at different depths)."""
+    parents = idxs // max_deg
+    rows = jnp.take(paths, parents, axis=0)                  # (cap, k1)
+    col = jax.lax.broadcasted_iota(jnp.int32, rows.shape, 1)
+    dsel = jnp.take(depth_rows, parents)
+    return jnp.where(col == dsel[:, None] + 1,
+                     jnp.take(vflat, idxs)[:, None], rows)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_deg", "interpret", "use_ref"))
+def _frontier_fused_jit(
+        paths: jnp.ndarray, rank: jnp.ndarray, tvec: jnp.ndarray,
+        depthv: jnp.ndarray, begin: jnp.ndarray, endb: jnp.ndarray,
+        dst: jnp.ndarray, wantc: jnp.ndarray, *, max_deg: int,
+        interpret: bool, use_ref: bool
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """Fused masks (Pallas kernel or jnp ref) + compaction, one jit.
+
+    Compaction runs over the *flat* candidate order (row-major), and the
+    wrapper packs rows member-rank-ascending, so the compacted emit and
+    cont matrices are per-member contiguous segments in each member's
+    exact solo emission order — the host slices them apart with the
+    per-member counts.  Last-hop continue suppression happens HERE (the
+    ``wantc`` per-member mask), after the kernel: the kernel always
+    computes the full cont mask so dead-row and counter accounting
+    matches the single-query kernel bit-for-bit.
+    """
+    C, _k1 = paths.shape
+    m = tvec.shape[0]
+    if use_ref:
+        vnew, emit, cont, counters = ref.frontier_fused_masks_ref(
+            paths, rank, tvec, depthv, begin, endb, dst, max_deg, PAD)
+    else:
+        vnew, emit, cont, counters = _frontier_fused_pallas(
+            paths, rank, tvec, depthv, begin, endb, dst,
+            max_deg=max_deg, interpret=interpret)
+    cap = C * max_deg
+    vflat = vnew.reshape(-1)
+    rankflat = jnp.repeat(rank, max_deg)
+    depth_rows = jnp.take(depthv, rank)
+    flat_emit = emit.reshape(-1) != 0
+    eidx = jnp.nonzero(flat_emit, size=cap, fill_value=0)[0]
+    emit_rows = _children_fused(paths, vflat, eidx, depth_rows, max_deg)
+    n_emit_m = jnp.zeros((m,), jnp.int32).at[rankflat].add(
+        flat_emit.astype(jnp.int32))
+    flat_cont = (cont.reshape(-1) != 0) & jnp.take(wantc, rankflat)
+    cidx = jnp.nonzero(flat_cont, size=cap, fill_value=0)[0]
+    cont_rows = _children_fused(paths, vflat, cidx, depth_rows, max_deg)
+    n_cont_m = jnp.zeros((m,), jnp.int32).at[rankflat].add(
+        flat_cont.astype(jnp.int32))
+    return emit_rows, cont_rows, n_emit_m, n_cont_m, counters
+
+
+def frontier_expand_fused(
+        paths: np.ndarray, rank: np.ndarray, tvec: np.ndarray,
+        depthv: np.ndarray, begin: jnp.ndarray, endb: jnp.ndarray,
+        dst: jnp.ndarray, wantc: np.ndarray, *, max_deg: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """One fused IDX-DFS hop for chunks of many queries (DESIGN.md §9).
+
+    ``paths`` (rows, k1max) int32 packs one chunk per member, rows in
+    ascending member order, each member's rows at its own common depth
+    (columns past a member's own k+1 stay PAD); ``rank`` (rows,) int32
+    tags each row's member; ``tvec``/``depthv`` (m,) int32 carry each
+    member's target and chunk depth; ``begin``/``endb`` (m·n,) int32 are
+    the flattened per-member offset tables (``endb`` pre-sliced to each
+    member's budget column b = k − depth − 1); ``dst`` (m·mfm,) int32
+    the flattened adjacency slabs (PAD-padded to the common ``mfm``);
+    ``wantc`` (m,) bool is per-member ``want_cont`` (False on a member's
+    last hop — suppression happens after the kernel so counters still
+    see the candidates, exactly like the single-query path).
+
+    Returns ``(emit_rows, cont_rows, n_emit_m, n_cont_m, counters)``:
+    emit/cont row matrices in flat order (member-contiguous — slice
+    member i's segment with the exclusive cumsum of ``n_emit_m`` /
+    ``n_cont_m``), and ``counters`` the (m, 4) per-member Fig.-6 rows.
+    All device-resident; one kernel dispatch per call.
+    """
+    paths = np.asarray(paths, dtype=np.int32)
+    rows, _k1 = paths.shape
+    assert max_deg >= 1, "zero-fanout chunks never reach the device"
+    C = _next_pow2(max(rows, 8))
+    if C != rows:
+        paths = np.pad(paths, ((0, C - rows), (0, 0)), constant_values=PAD)
+        rank = np.pad(np.asarray(rank, np.int32), (0, C - rows))
+    _count_dispatch()
+    return _frontier_fused_jit(
+        jnp.asarray(paths), jnp.asarray(rank, dtype=jnp.int32),
+        jnp.asarray(tvec, dtype=jnp.int32),
+        jnp.asarray(depthv, dtype=jnp.int32), begin, endb, dst,
+        jnp.asarray(wantc, dtype=bool), max_deg=_next_pow2(max_deg),
+        interpret=_interpret(), use_ref=not _enabled())
+
+
+# ---------------------------------------------------------------------------
+# Device-resident work deque (DESIGN.md §9): the IDX-DFS chunk stack
+# lives in a device arena, and one jit'd while_loop pops/expands/pushes
+# many chunks per host round-trip — the host syncs only to drain emitted
+# paths and check the cooperative deadline.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DequeConfig:
+    """Static geometry of the device-resident work deque.
+
+    The arena is a row stack: live chunk rows occupy ``[0, top)`` and
+    chunk ``j`` (meta slot ``j``, bottom to top) spans the rows between
+    the cumulative lengths of its predecessors; pops read from the top,
+    pushes scatter continue pieces back so the solo driver's reversed
+    piece order is preserved (piece 0 topmost).  All capacities are
+    static so one jit serves every round; the rows past ``arena_cap``
+    (and the meta slots past ``max_chunks``) are scratch targets for
+    masked scatters and are never read back.
+    """
+    k1: int              # path width k + 1
+    chunk_size: int      # the driver's chunk split (cs)
+    block_rows: int      # B: pow2 row height of one pop (>= chunk_size)
+    max_deg: int         # pow2 fan-out bound of the whole index
+    cap: int             # block_rows * max_deg candidate slots
+    arena_cap: int       # live arena rows (stack region)
+    arena_rows: int      # arena_cap + cap (scratch tail)
+    emit_cap: int        # emitted rows one round may buffer
+    max_chunks: int      # live meta slots
+    max_pieces: int      # pow-bound on pieces one push can create
+    round_pops: int      # pops per host round-trip
+
+
+def deque_config(k1: int, chunk_size: int, max_deg: int,
+                 round_pops: int = 64) -> DequeConfig:
+    """Size a ``DequeConfig`` for one index/driver combination."""
+    B = _next_pow2(max(chunk_size, 8))
+    md = _next_pow2(max(max_deg, 1))
+    cap = B * md
+    arena_cap = max(8 * cap, 4 * B)
+    emit_cap = max(4 * cap, 4 * B)
+    maxp = cap // max(chunk_size, 1) + 2
+    maxc = max(4096, 8 * maxp)
+    return DequeConfig(k1=k1, chunk_size=chunk_size, block_rows=B,
+                       max_deg=md, cap=cap, arena_cap=arena_cap,
+                       arena_rows=arena_cap + cap, emit_cap=emit_cap,
+                       max_chunks=maxc, max_pieces=maxp,
+                       round_pops=round_pops)
+
+
+def frontier_deque_init(root: np.ndarray, *, cfg: DequeConfig
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray, jnp.ndarray]:
+    """Fresh deque state holding one root chunk (the (k+1,) root row)."""
+    arena = jnp.full((cfg.arena_rows, cfg.k1), PAD, jnp.int32)
+    arena = arena.at[0].set(jnp.asarray(root, jnp.int32))
+    meta_depth = jnp.zeros((cfg.max_chunks + cfg.max_pieces,), jnp.int32)
+    meta_len = meta_depth.at[0].set(1)
+    return arena, meta_depth, meta_len, jnp.int32(1), jnp.int32(1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret", "use_ref"))
+def _deque_round_jit(
+        arena: jnp.ndarray, meta_depth: jnp.ndarray, meta_len: jnp.ndarray,
+        top: jnp.ndarray, n_chunks: jnp.ndarray, begin: jnp.ndarray,
+        end: jnp.ndarray, dst: jnp.ndarray, t: jnp.ndarray, *,
+        cfg: DequeConfig, interpret: bool, use_ref: bool
+) -> tuple[jnp.ndarray, ...]:
+    """One device round: a while_loop of in-arena pop → expand → push.
+
+    Each iteration pops the top chunk, runs the mask stage (Pallas
+    kernel or the jnp ref oracle), appends completed paths to the
+    round's emit buffer, and scatters the surviving partials back into
+    the arena as ``chunk_size`` pieces in the solo driver's reversed
+    piece order — so the pop sequence, the chunk split and therefore
+    every Fig.-6 counter are bit-identical to the host-looped device
+    path.  The loop stops at ``round_pops``, an empty deque, or a
+    conservative capacity guard (arena/emit/meta margin smaller than
+    one worst-case push) — the host detects the zero-pop stall and
+    rebuilds its own work list from the arena.
+    """
+    cs = cfg.chunk_size
+    cap = cfg.cap
+    B = cfg.block_rows
+    k1 = cfg.k1
+
+    def cond(state: tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+        _a, _md, _ml, s_top, s_nc, _eb, _el, s_ne, _c, s_pops = state
+        return ((s_nc > 0) & (s_pops < cfg.round_pops)
+                & (s_top + cap <= cfg.arena_cap)
+                & (s_ne + cap <= cfg.emit_cap)
+                & (s_nc + cfg.max_pieces <= cfg.max_chunks))
+
+    def body(state: tuple[jnp.ndarray, ...]) -> tuple[jnp.ndarray, ...]:
+        s_arena, s_md, s_ml, s_top, s_nc, s_eb, s_el, s_ne, s_ctr, \
+            s_pops = state
+        cidx = s_nc - 1
+        clen = s_ml[cidx]
+        cdepth = s_md[cidx]
+        cstart = s_top - clen
+        block = jax.lax.dynamic_slice(s_arena, (cstart, jnp.int32(0)),
+                                      (B, k1))
+        rowid = jnp.arange(B, dtype=jnp.int32)
+        paths = jnp.where((rowid < clen)[:, None], block, PAD)
+        s_top = cstart
+        s_nc = cidx
+        s_pops = s_pops + 1
+
+        b = jnp.clip(k1 - 2 - cdepth, 0, k1 - 1)
+        endb = jnp.take(end, b, axis=1)
+        if use_ref:
+            vnew, emit, cont, ctr1 = ref.frontier_masks_ref(
+                paths, begin, endb, dst, cdepth, t, cfg.max_deg, PAD)
+        else:
+            meta = jnp.stack([cdepth, t]).astype(jnp.int32)
+            vnew, emit, cont, ctr1 = _frontier_pallas(
+                paths, begin, endb, dst, meta, max_deg=cfg.max_deg,
+                interpret=interpret)
+        s_ctr = s_ctr + ctr1
+        vflat = vnew.reshape(-1)
+
+        flat_emit = emit.reshape(-1) != 0
+        eidx = jnp.nonzero(flat_emit, size=cap, fill_value=0)[0]
+        echild = _children(paths, vflat, eidx, cdepth, cfg.max_deg)
+        ne_new = jnp.sum(flat_emit.astype(jnp.int32))
+        s_eb = jax.lax.dynamic_update_slice(s_eb, echild,
+                                            (s_ne, jnp.int32(0)))
+        s_el = jax.lax.dynamic_update_slice(
+            s_el, jnp.full((cap,), cdepth + 1, jnp.int32), (s_ne,))
+        s_ne = s_ne + ne_new
+
+        # push: scatter cont children so piece 0 lands on top (the solo
+        # driver pushes pieces reversed) with intra-piece order intact
+        wantc = cdepth + 1 < jnp.int32(k1 - 1)
+        flat_cont = (cont.reshape(-1) != 0) & wantc
+        n_cont = jnp.sum(flat_cont.astype(jnp.int32))
+        crank = jnp.cumsum(flat_cont.astype(jnp.int32)) - 1
+        piece = crank // cs
+        np_pieces = (n_cont + cs - 1) // cs
+        dest = (s_top + n_cont - jnp.minimum((piece + 1) * cs, n_cont)
+                + (crank - piece * cs))
+        dest = jnp.where(flat_cont, dest,
+                         cfg.arena_cap + jnp.arange(cap, dtype=jnp.int32))
+        children = _children(paths, vflat,
+                             jnp.arange(cap, dtype=jnp.int32), cdepth,
+                             cfg.max_deg)
+        s_arena = s_arena.at[dest].set(children)
+        pj = jnp.arange(cfg.max_pieces, dtype=jnp.int32)
+        valid_p = pj < np_pieces
+        slot = jnp.where(valid_p, s_nc + np_pieces - 1 - pj,
+                         cfg.max_chunks + pj)
+        s_md = s_md.at[slot].set(cdepth + 1)
+        s_ml = s_ml.at[slot].set(jnp.clip(n_cont - pj * cs, 0, cs))
+        s_top = s_top + n_cont
+        s_nc = s_nc + np_pieces
+        return (s_arena, s_md, s_ml, s_top, s_nc, s_eb, s_el, s_ne,
+                s_ctr, s_pops)
+
+    emitbuf = jnp.full((cfg.emit_cap + cap, k1), PAD, jnp.int32)
+    emitlen = jnp.zeros((cfg.emit_cap + cap,), jnp.int32)
+    state0 = (arena, meta_depth, meta_len, top, n_chunks, emitbuf,
+              emitlen, jnp.int32(0), jnp.zeros((4,), jnp.int32),
+              jnp.int32(0))
+    return jax.lax.while_loop(cond, body, state0)
+
+
+def frontier_deque_round(
+        arena: jnp.ndarray, meta_depth: jnp.ndarray, meta_len: jnp.ndarray,
+        top: jnp.ndarray, n_chunks: jnp.ndarray, begin: jnp.ndarray,
+        end: jnp.ndarray, dst: jnp.ndarray, t: int, *, cfg: DequeConfig
+) -> tuple[jnp.ndarray, ...]:
+    """One host round-trip of the device-resident deque (DESIGN.md §9).
+
+    Runs up to ``cfg.round_pops`` pop→expand→push iterations entirely on
+    device and returns the updated deque state plus the round's outputs:
+    ``(arena, meta_depth, meta_len, top, n_chunks, emitbuf, emitlen,
+    n_emit, counters, pops)``.  The first ``n_emit`` rows of ``emitbuf``
+    are the paths completed this round (``emitlen`` their hop counts);
+    ``counters`` is the summed (4,) Fig.-6 vector and ``pops`` the
+    number of chunks consumed (the driver's ``stats.chunks`` delta).  A
+    round returning ``pops == 0`` with ``n_chunks > 0`` is a capacity
+    stall: the caller rebuilds its host work list from ``arena[:top]``
+    and the bottom ``n_chunks`` meta slots and resumes the host-looped
+    driver.  ``REPRO_PALLAS=off`` routes the mask stage to the ref
+    oracle; counted as one device dispatch per round.
+    """
+    _count_dispatch()
+    return _deque_round_jit(arena, meta_depth, meta_len, top, n_chunks,
+                            begin, end, dst, jnp.asarray(t, jnp.int32),
+                            cfg=cfg, interpret=_interpret(),
+                            use_ref=not _enabled())
 
 
 # ---------------------------------------------------------------------------

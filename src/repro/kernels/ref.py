@@ -78,6 +78,56 @@ def frontier_masks_ref(paths, begin, endb, dst, depth, t, max_deg: int,
             cont.astype(jnp.int32), counters)
 
 
+def frontier_fused_masks_ref(paths, rank, tvec, depthv, begin, endb, dst,
+                             max_deg: int, pad: int = -1):
+    """Pure-jnp oracle for kernels/frontier_expand._frontier_fused_kernel.
+
+    paths (C, k1max) int32 rows packed member-rank-ascending (PAD rows
+    inert); rank (C,) int32 member tags; tvec/depthv (m,) int32 per-member
+    target/depth; begin/endb (m·n,) and dst (m·mfm,) int32 flattened
+    per-member tables (endb pre-sliced to each member's budget column).
+    Returns (vnew, emit, cont, counters) with counters (m, 4) per-member
+    Fig.-6 rows — same semantics as the fused kernel.
+    """
+    C, k1 = paths.shape
+    m = tvec.shape[0]
+    n = begin.shape[0] // m
+    mfm = dst.shape[0] // m
+    depth = jnp.take(depthv, rank)
+    t = jnp.take(tvec, rank)
+    last = jnp.take_along_axis(paths, depth[:, None], axis=1)[:, 0]
+    valid = last != pad
+    lastc = jnp.where(valid, last, 0)
+    flat = rank * jnp.int32(n) + lastc
+    bsel = jnp.take(begin, flat)
+    esel = jnp.take(endb, flat)
+    cnt = jnp.where(valid, esel - bsel, 0)
+    slot = jnp.arange(max_deg, dtype=jnp.int32)[None, :]
+    in_range = slot < cnt[:, None]
+    pos = (jnp.clip(bsel[:, None] + slot, 0, mfm - 1)
+           + rank[:, None] * jnp.int32(mfm))
+    vnew = jnp.take(dst, pos)
+    on_prefix = (jnp.arange(k1, dtype=jnp.int32)[None, :]
+                 <= depth[:, None])                          # (C, k1)
+    dup = ((paths[:, :, None] == vnew[:, None, :])
+           & on_prefix[:, :, None]).any(axis=1)
+    is_t = vnew == t[:, None]
+    emit = in_range & ~dup & is_t
+    cont = in_range & ~dup & ~is_t
+    alive = (emit | cont).any(axis=1)
+    dead = valid & ~alive
+    edges_row = cnt
+    invalid_row = (jnp.sum((dup & in_range).astype(jnp.int32), axis=1)
+                   + dead.astype(jnp.int32))
+    onehot = jnp.arange(m, dtype=jnp.int32)[None, :] == rank[:, None]
+    edges_m = jnp.sum(jnp.where(onehot, edges_row[:, None], 0), axis=0)
+    invalid_m = jnp.sum(jnp.where(onehot, invalid_row[:, None], 0), axis=0)
+    counters = jnp.stack([edges_m, edges_m, invalid_m,
+                          jnp.zeros_like(edges_m)], axis=1)
+    return (jnp.where(emit | cont, vnew, pad), emit.astype(jnp.int32),
+            cont.astype(jnp.int32), counters)
+
+
 # ---------------------------------------------------------------------------
 # Flash attention (LM prefill / train)
 # ---------------------------------------------------------------------------

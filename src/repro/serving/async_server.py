@@ -50,7 +50,6 @@ import collections
 import dataclasses
 import itertools
 import math
-import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 from typing import Union
@@ -58,6 +57,7 @@ from typing import Union
 if TYPE_CHECKING:  # deferred: metrics imports this module at runtime
     from .metrics import MetricsSnapshot
 
+from ..core import clock
 from ..core.batch import BatchOutput, BatchPathEnum, DEFAULT_GRAPH_ID
 from ..core.enumerate import EnumStats
 from ..core.graph import Graph
@@ -130,8 +130,8 @@ class AsyncServeStats:
 @dataclasses.dataclass
 class _Pending:
     req: PathQueryRequest
-    enqueued_at: float                 # perf_counter at admission
-    deadline_at: Optional[float]       # absolute perf_counter; None = no SLO
+    enqueued_at: float                 # core.clock.now() at admission
+    deadline_at: Optional[float]       # absolute core.clock; None = no SLO
     seq: int                           # arrival order, the EDF tiebreak
     future: "asyncio.Future[PathQueryResponse]"
 
@@ -367,7 +367,11 @@ class AsyncHcPEServer:
             self.stats.rejected_tenant_quota += 1
             return self._rejected(req, STATUS_REJECTED_TENANT_QUOTA)
 
-        now = time.perf_counter()
+        # admission timestamp and absolute deadline both read the engine's
+        # deadline clock (core.clock) — the same source the enumeration
+        # drivers compare against, so enforced truncation can't be skewed
+        # by a clock-origin mismatch (tests/test_deadline_clock.py)
+        now = clock.now()
         dl_ms = (req.deadline_ms if req.deadline_ms is not None
                  else self.default_deadline_ms)
         pending = _Pending(
@@ -487,7 +491,7 @@ class AsyncHcPEServer:
                 # the group's deadline: when its last member's SLO expires
                 deadline = max(deadlines)
         queries = [(p.req.s, p.req.t, p.req.k) for p in group]
-        dispatched = time.perf_counter()
+        dispatched = clock.now()
         try:
             out = await asyncio.to_thread(
                 self.engine.run, graph, queries, count_only=count_only,
@@ -502,7 +506,7 @@ class AsyncHcPEServer:
                     self.stats.cancelled += 1
                 self._settle(p)
             return
-        done = time.perf_counter()
+        done = clock.now()
         self._outputs.append(out)
         self.enum_totals.merge(out.enum_stats)
         for p, item in zip(group, out.items):

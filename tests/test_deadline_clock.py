@@ -1,0 +1,148 @@
+"""Regression suite for the single deadline clock (core/clock.py).
+
+Cooperative truncation is a producer/consumer contract: serving mints an
+*absolute* deadline at admission and the enumeration drivers compare
+against it between chunks.  The historical bug class this suite pins
+down is a clock-origin mismatch — producer and consumer reading
+different time sources, which silently *disables* truncation (deadline
+forever in the consumer's future) or permanently *trips* it (deadline
+forever in the past) depending on the skew sign.
+
+The technique: skew ``clock._source`` a million seconds away from
+``time.perf_counter()`` and drive every deadline consumer (DFS driver,
+device driver, ranked heap + bucket drivers, join, the shared walk, the
+async server's enforced deadlines).  Deadlines minted from ``clock.now()``
+must still truncate exactly when expired *on that clock* — any code path
+still reading ``time.perf_counter()`` directly sees timestamps 1e6 s
+away and fails these assertions immediately.
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEnum, build_index, clock,
+                        enumerate_paths_idx, enumerate_paths_join,
+                        erdos_renyi)
+from repro.serving import AsyncHcPEServer, PathQueryRequest, STATUS_OK
+
+SKEW = 1.0e6   # seconds between the skewed clock and time.perf_counter()
+
+
+@pytest.fixture
+def skewed_clock(monkeypatch):
+    """Shift the deadline clock's origin far away from perf_counter."""
+    monkeypatch.setattr(clock, "_source",
+                        lambda: time.perf_counter() + SKEW)
+
+
+def _case(seed=7, n=30, deg=3.0, k=4):
+    g = erdos_renyi(n, deg, seed=seed)
+    rng = np.random.default_rng(seed)
+    while True:
+        s, t = map(int, rng.choice(n, 2, replace=False))
+        idx = build_index(g, s, t, k)
+        if idx.num_index_edges:
+            full = enumerate_paths_idx(idx)
+            if full.count:
+                return g, idx, full
+
+
+# ---------------------------------------------------------------------------
+# clock primitives
+# ---------------------------------------------------------------------------
+
+def test_clock_primitives(monkeypatch):
+    tick = [100.0]
+    monkeypatch.setattr(clock, "_source", lambda: tick[0])
+    assert clock.now() == 100.0
+    assert clock.deadline_in(None) is None
+    assert clock.deadline_in(2.5) == 102.5
+    assert not clock.expired(None)
+    assert not clock.expired(100.5)
+    tick[0] = 100.5
+    assert clock.expired(100.5)    # boundary: >= is expired
+    assert clock.expired(100.0)
+
+
+# ---------------------------------------------------------------------------
+# every driver honors a clock.now()-minted deadline under heavy skew
+# ---------------------------------------------------------------------------
+
+def test_drivers_truncate_on_skewed_clock(skewed_clock):
+    _g, idx, full = _case()
+    past = clock.now() - 1.0
+    future = clock.now() + 3600.0
+
+    legs = [
+        lambda dl: enumerate_paths_idx(idx, deadline=dl),
+        lambda dl: enumerate_paths_idx(idx, backend="device", deadline=dl),
+        lambda dl: enumerate_paths_idx(idx, order="hops", deadline=dl),
+        lambda dl: enumerate_paths_idx(idx, order="hops", backend="device",
+                                       deadline=dl),
+        lambda dl: enumerate_paths_join(idx, cut=max(1, idx.k // 2),
+                                        deadline=dl),
+    ]
+    for leg in legs:
+        # expired on the shared clock -> truncates to nothing...
+        res = leg(past)
+        assert res.count == 0 and not res.exhausted
+        # ...while a live deadline does not truncate at all: a consumer
+        # still on raw perf_counter would invert exactly one of these
+        res = leg(future)
+        assert res.exhausted and res.count == full.count
+
+
+def test_batch_and_shared_walk_truncate_on_skewed_clock(skewed_clock):
+    g = erdos_renyi(24, 3.0, seed=3)
+    queries = [(0, 5, 4), (0, 6, 4), (1, 5, 3)]
+    eng = BatchPathEnum()          # sharing="auto": shared walk leg included
+    out = eng.run(g, queries, deadline=clock.now() - 1.0)
+    assert all(not it.result.exhausted and it.result.count == 0
+               for it in out.items)
+    out = eng.run(g, queries, deadline=clock.now() + 3600.0)
+    ref = BatchPathEnum().run(g, queries)
+    assert [it.result.count for it in out.items] == \
+        [it.result.count for it in ref.items]
+    assert all(it.result.exhausted for it in out.items)
+
+
+# ---------------------------------------------------------------------------
+# serving: admission (producer) and enforcement (consumer) share the source
+# ---------------------------------------------------------------------------
+
+def test_async_server_slo_consistent_under_skew(skewed_clock):
+    g = erdos_renyi(40, 3.0, seed=5)
+    reqs = [PathQueryRequest(uid=i, s=0, t=5 + i, k=4, deadline_ms=60_000.0)
+            for i in range(3)]
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=1.0,
+                                   enforce_deadlines=True) as srv:
+            return await srv.serve(reqs)
+
+    resps = asyncio.run(drive())
+    for r in resps:
+        # a consumer on the raw clock would see these deadlines as ~1e6 s
+        # in the past and truncate every query to an empty response
+        assert r.status == STATUS_OK
+        assert r.exhausted
+        assert r.slo_met
+
+
+def test_async_server_expired_deadline_truncates_under_skew(skewed_clock):
+    g = erdos_renyi(40, 3.0, seed=5)
+    # a deadline that expires during the batching window: with the shared
+    # clock the engine sees it as expired and truncates cooperatively
+    reqs = [PathQueryRequest(uid=0, s=0, t=5, k=4, deadline_ms=0.0)]
+
+    async def drive():
+        async with AsyncHcPEServer(g, batch_window_ms=20.0,
+                                   enforce_deadlines=True) as srv:
+            return await srv.serve(reqs)
+
+    (r,) = asyncio.run(drive())
+    assert r.status == STATUS_OK
+    assert not r.exhausted and r.count == 0
+    assert r.slo_met is False

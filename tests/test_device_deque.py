@@ -1,0 +1,164 @@
+"""Device-resident work deque tests (DESIGN.md §9).
+
+The deque driver (`core.enumerate._drive_resident`) keeps the LIFO
+chunk stack in a device arena and runs many pop→expand→push iterations
+per host sync through ``ops.frontier_deque_round``.  Its contract is
+bit-for-bit agreement with the host-looped device driver (and therefore
+with the host backend): same paths, same count, same ``EnumStats``
+including ``chunks`` (the in-arena push replicates the driver's
+chunk_size split and reversed piece order, so the pop sequence is
+identical).  These tests pin that contract, the ``REPRO_DEVICE_DEQUE``
+kill switch, the capacity-stall fallback that rebuilds the host work
+list mid-walk, and the cooperative deadline.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import build_index, clock, erdos_renyi, layered_dag
+from repro.core import enumerate as en
+from repro.core.enumerate import enumerate_paths_idx
+from repro.kernels import ops as kops
+
+
+def _assert_equal(a, b, tag=""):
+    assert a.count == b.count, tag
+    assert a.exhausted == b.exhausted, tag
+    assert a.stats == b.stats, tag
+    assert a.as_tuples() == b.as_tuples(), tag
+
+
+def _graphs():
+    yield erdos_renyi(40, 4.0, seed=7), 0, 39, 4
+    yield erdos_renyi(25, 8.0, seed=8), 0, 24, 4
+    yield layered_dag(4, 12, 6.0, seed=9), 0, 47, 4
+
+
+@pytest.mark.parametrize("chunk_size", [5, 64, 16384])
+def test_deque_bitwise_parity_with_host_and_loop(chunk_size, monkeypatch):
+    monkeypatch.delenv("REPRO_DEVICE_DEQUE", raising=False)
+    for g, s, t, k in _graphs():
+        idx = build_index(g, s, t, k)
+        if idx is None:
+            continue
+        host = enumerate_paths_idx(idx, backend="host",
+                                   chunk_size=chunk_size)
+        deque = enumerate_paths_idx(idx, backend="device",
+                                    chunk_size=chunk_size)
+        monkeypatch.setenv("REPRO_DEVICE_DEQUE", "off")
+        loop = enumerate_paths_idx(idx, backend="device",
+                                   chunk_size=chunk_size)
+        monkeypatch.delenv("REPRO_DEVICE_DEQUE")
+        _assert_equal(deque, host, f"cs={chunk_size} vs host")
+        _assert_equal(deque, loop, f"cs={chunk_size} vs loop")
+        assert deque.exhausted
+
+
+def test_deque_count_only_parity(monkeypatch):
+    monkeypatch.delenv("REPRO_DEVICE_DEQUE", raising=False)
+    g, s, t, k = next(_graphs())
+    idx = build_index(g, s, t, k)
+    host = enumerate_paths_idx(idx, backend="host")
+    co = enumerate_paths_idx(idx, backend="device", count_only=True)
+    assert co.count == host.count
+    assert co.stats == host.stats
+    assert co.paths.shape[0] == 0
+
+
+@pytest.mark.parametrize("val", ["off", "0"])
+def test_deque_env_kill_switch(val, monkeypatch):
+    """REPRO_DEVICE_DEQUE=off|0 pins the host-looped device driver."""
+    called = []
+    real = en._drive_resident
+
+    def spy(*a, **kw):
+        called.append(True)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(en, "_drive_resident", spy)
+    g, s, t, k = next(_graphs())
+    idx = build_index(g, s, t, k)
+    monkeypatch.setenv("REPRO_DEVICE_DEQUE", val)
+    off = enumerate_paths_idx(idx, backend="device")
+    assert not called
+    monkeypatch.delenv("REPRO_DEVICE_DEQUE")
+    on = enumerate_paths_idx(idx, backend="device")
+    assert called
+    _assert_equal(on, off)
+
+
+def test_deque_ineligible_args_take_loop_driver(monkeypatch):
+    """first_n / max_results / constraints stay on the host-looped path."""
+    called = []
+    real = en._drive_resident
+    monkeypatch.setattr(en, "_drive_resident",
+                        lambda *a, **kw: called.append(True) or real(*a, **kw))
+    g, s, t, k = next(_graphs())
+    idx = build_index(g, s, t, k)
+    host = enumerate_paths_idx(idx, backend="host", first_n=3)
+    dev = enumerate_paths_idx(idx, backend="device", first_n=3)
+    assert not called
+    _assert_equal(dev, host)
+
+
+def test_deque_capacity_stall_resumes_on_host(monkeypatch):
+    """A tripped arena guard rebuilds the host work list mid-walk and
+    finishes on `_drive_from` with identical results and stats."""
+    real_cfg = kops.deque_config
+
+    def tiny(k1, chunk_size, max_deg, round_pops=64):
+        cfg = real_cfg(k1, chunk_size, max_deg, round_pops)
+        # arena barely fits one expansion: the push guard trips with
+        # chunks still queued, forcing the stall branch
+        return dataclasses.replace(cfg, arena_cap=cfg.cap + 2,
+                                   arena_rows=cfg.cap + 2 + cfg.cap)
+
+    monkeypatch.setattr(kops, "deque_config", tiny)
+    resumed = []
+    real_from = en._drive_from
+    monkeypatch.setattr(
+        en, "_drive_from",
+        lambda *a, **kw: resumed.append(True) or real_from(*a, **kw))
+    monkeypatch.delenv("REPRO_DEVICE_DEQUE", raising=False)
+
+    g = erdos_renyi(30, 6.0, seed=5)
+    idx = build_index(g, 0, 29, 5)
+    assert idx is not None
+    host = enumerate_paths_idx(idx, backend="host", chunk_size=5)
+    dev = enumerate_paths_idx(idx, backend="device", chunk_size=5)
+    assert resumed, "stall branch never triggered"
+    _assert_equal(dev, host)
+
+
+def test_deque_deadline_expired_returns_empty_nonexhausted(monkeypatch):
+    monkeypatch.delenv("REPRO_DEVICE_DEQUE", raising=False)
+    g, s, t, k = next(_graphs())
+    idx = build_index(g, s, t, k)
+    r = enumerate_paths_idx(idx, backend="device",
+                            deadline=clock.now() - 1.0)
+    assert not r.exhausted
+    assert r.count == 0
+
+
+def test_deque_round_trip_state_shapes():
+    """frontier_deque_init/round structural contract: arena rows, meta
+    slots and the monotone pop counter."""
+    g = erdos_renyi(16, 3.0, seed=3)
+    idx = build_index(g, 2, 15, 3)
+    if idx is None:
+        pytest.skip("no index for this seed")
+    max_deg = int((idx.fwd_end[:, idx.k] - idx.fwd_begin).max(initial=0))
+    cfg = kops.deque_config(4, 8, max(max_deg, 1))
+    root = np.array([2, -1, -1, -1], np.int32)
+    arena, md, ml, top, nc = kops.frontier_deque_init(root, cfg=cfg)
+    assert arena.shape == (cfg.arena_rows, 4)
+    assert int(top) == 1 and int(nc) == 1
+    assert int(ml[0]) == 1
+    dev = idx.device_arrays()
+    out = kops.frontier_deque_round(arena, md, ml, top, nc, dev.begin,
+                                    dev.end, dev.dst, idx.t, cfg=cfg)
+    arena2, md2, ml2, top2, nc2, emitbuf, emitlen, n_emit, ctr, pops = out
+    assert int(pops) >= 1
+    assert int(top2) >= 0 and int(nc2) >= 0
+    assert np.asarray(ctr).shape == (4,)

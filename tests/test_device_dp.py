@@ -1,0 +1,216 @@
+"""Device (semiring-kernel) hop-count DP: parity, overflow, fallback.
+
+The join/count plan's hop-count derivation (Alg. 5 / Eq. 6-7) gained a
+device backend (DESIGN.md §9): level masks from min-plus BFS relaxations
+(`kernels/ops.bfs_dense`) and one counting-semiring matmul per DP level
+(`kernels/ops.counting_spmm`), resolved through
+``join.resolve_join_backend`` behind the engine's host|device|auto knob.
+
+Contracts pinned here:
+  * **bit-match** — the device DP equals the host float64 DP *and* an
+    int64 reference DP field-for-field on every random case (the f32
+    matmul is exact below 2^24 because every partial sum is an exact
+    integer, so accumulation order can't matter);
+  * **overflow promotion** — at or past 2^24 (estimator.EXACT_COUNT_MAX)
+    the device build promotes itself to the host build instead of
+    silently returning rounded counts (``backend_used`` records it);
+  * **distance parity** — the min-plus distances agree with the index's
+    BFS arrays on every index vertex (the §3.2 closure argument);
+  * **fallback matrix** — off/0 kill switch, the dense-tile n ceiling,
+    and the CI force spelling, mirroring the enumeration column.
+
+On CPU the kernels run in interpret mode (JAX_PLATFORMS=cpu CI leg), so
+this suite covers the device leg everywhere tier-1 runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BatchPathEnum, build_index, complete, erdos_renyi,
+                        from_edges, oracle, walk_count_dp)
+from repro.core import estimator as est
+from repro.core.join import hop_count_dp, resolve_join_backend
+from repro.core.planner import plan_query
+
+DP_FIELDS = ("c_to", "c_from", "q_prefix", "q_suffix")
+
+
+def _random_case(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 34))
+    m = max(1, int(n * float(rng.choice([0.5, 1.5, 3.0, 5.0]))))
+    edges = rng.integers(0, n, size=(m, 2))      # dups/self-loops ok
+    g = from_edges(n, edges)
+    s, t = map(int, rng.choice(n, 2, replace=False))
+    k = int(rng.integers(2, 7))
+    return g, build_index(g, s, t, k)
+
+
+def _int64_dp(idx):
+    """Independent int64 reference build of Alg. 5 (no shared code with
+    estimator.py beyond the index arrays)."""
+    n, k, t = idx.n, idx.k, idx.t
+    ii = np.arange(k + 1)
+    lvl = ((idx.dist_s[None, :] <= ii[:, None])
+           & (idx.dist_t[None, :] <= (k - ii)[:, None]))
+    eu = np.repeat(np.arange(n), np.asarray(idx.fwd_end[:, k]
+                                            - idx.fwd_begin))
+    ev = np.asarray(idx.fwd_dst, dtype=np.intp)
+    du, dv = idx.dist_s[eu], idx.dist_t[ev]
+    c_to = np.zeros((k + 1, n), dtype=np.int64)
+    c_to[k] = lvl[k]
+    for i in range(k - 1, -1, -1):
+        contrib = np.zeros(n, dtype=np.int64)
+        m = dv <= (k - i - 1)
+        np.add.at(contrib, eu[m], c_to[i + 1][ev[m]])
+        contrib[t] += c_to[i + 1][t]
+        c_to[i] = np.where(lvl[i], contrib, 0)
+    c_from = np.zeros((k + 1, n), dtype=np.int64)
+    c_from[0] = lvl[0]
+    for i in range(1, k + 1):
+        contrib = np.zeros(n, dtype=np.int64)
+        m = du <= (i - 1)
+        np.add.at(contrib, ev[m], c_from[i - 1][eu[m]])
+        contrib[t] += c_from[i - 1][t]
+        c_from[i] = np.where(lvl[i], contrib, 0)
+    return c_to, c_from
+
+
+@pytest.mark.parametrize("seed", range(16))
+def test_device_dp_bit_matches_host_and_int64(seed):
+    _g, idx = _random_case(seed)
+    host = walk_count_dp(idx)
+    dev = walk_count_dp(idx, backend="device")
+    assert dev.backend_used == "device"
+    assert host.backend_used == "host"
+    for f in DP_FIELDS:
+        assert np.array_equal(getattr(host, f), getattr(dev, f)), (seed, f)
+    assert (host.cut, host.q_total, host.t_dfs, host.t_join) == \
+        (dev.cut, dev.q_total, dev.t_dfs, dev.t_join)
+    # the satellite's exactness bar: bit-match against an int64 build
+    c_to64, c_from64 = _int64_dp(idx)
+    assert np.array_equal(dev.c_to, c_to64.astype(np.float64)), seed
+    assert np.array_equal(dev.c_from, c_from64.astype(np.float64)), seed
+
+
+@pytest.mark.parametrize("seed", range(16))
+def test_minplus_distances_match_index_bfs(seed):
+    _g, idx = _random_case(seed)
+    k = idx.k
+    ds, dt = est.device_index_distances(idx)
+    eu, ev = est._index_edge_list(idx)
+    iv = np.unique(np.concatenate([eu, ev])).astype(np.intp)
+    assert np.array_equal(ds[iv], np.minimum(idx.dist_s, k + 1)[iv]), seed
+    assert np.array_equal(dt[iv], np.minimum(idx.dist_t, k + 1)[iv]), seed
+    # off-index vertices may only *overestimate* (to the k+1 sentinel):
+    # enough for mask parity, which the DP bit-match above relies on
+    assert np.all(ds >= np.minimum(idx.dist_s, k + 1))
+    assert np.all(dt >= np.minimum(idx.dist_t, k + 1))
+
+
+def test_device_dp_walk_count_exact_vs_oracle():
+    """dp.q_total is exact on walks; on a DAG walks == paths, so the
+    device build must reproduce the oracle's path count exactly."""
+    from repro.core import layered_dag
+    g = layered_dag(4, 6, 3.0, seed=9)
+    s, t = 0, g.n - 1
+    idx = build_index(g, s, t, 4)
+    want = len(oracle.enumerate_paths(g, s, t, 4))
+    dev = walk_count_dp(idx, backend="device")
+    assert dev.backend_used == "device"
+    assert dev.q_total == float(want)
+
+
+# ---------------------------------------------------------------------------
+# overflow: detect and promote, never silently round
+# ---------------------------------------------------------------------------
+
+def test_overflow_promotes_to_host_build():
+    """A dense-enough query really does push level counts past 2^24 —
+    the device build must hand the numbers back to the host float64 DP
+    (which is exact far beyond int32/f32 ranges)."""
+    g = complete(34)
+    idx = build_index(g, 0, 1, 6)
+    host = walk_count_dp(idx)
+    assert host.c_from.max() >= est.EXACT_COUNT_MAX   # case really overflows
+    dev = walk_count_dp(idx, backend="device")
+    assert dev.backend_used == "host"                 # promoted
+    for f in DP_FIELDS:
+        assert np.array_equal(getattr(host, f), getattr(dev, f))
+    assert dev.q_total == host.q_total
+
+
+def test_overflow_threshold_is_the_f32_exactness_bound(monkeypatch):
+    """Lowering the bound forces promotion on an otherwise-exact case:
+    the fence is checked against every level value, not just q_total."""
+    g = erdos_renyi(20, 3.0, seed=2)
+    idx = build_index(g, 0, 5, 4)
+    dev = walk_count_dp(idx, backend="device")
+    if dev.backend_used != "device":      # degenerate seed: nothing to test
+        pytest.skip("case overflowed for real")
+    top = max(dev.c_to.max(), dev.c_from.max())
+    if top <= 1.0:
+        pytest.skip("trivial counts")
+    monkeypatch.setattr(est, "EXACT_COUNT_MAX", float(top))
+    promoted = walk_count_dp(idx, backend="device")
+    assert promoted.backend_used == "host"
+    assert np.array_equal(promoted.c_from, dev.c_from)
+
+
+# ---------------------------------------------------------------------------
+# fallback matrix (join/count column) + knob threading
+# ---------------------------------------------------------------------------
+
+def test_resolve_join_backend_matrix(monkeypatch):
+    g = erdos_renyi(30, 3.0, seed=7)
+    idx = build_index(g, 0, 5, 4)
+    assert resolve_join_backend(idx, None) == "host"
+    assert resolve_join_backend(idx, "host") == "host"
+    assert resolve_join_backend(idx, "device") == "device"
+    assert resolve_join_backend(idx, "auto") == "host"    # sparse and/or CPU
+    with pytest.raises(ValueError):
+        resolve_join_backend(idx, "gpu")
+    # the uniform kill switch beats every knob value
+    for off in ("off", "0"):
+        monkeypatch.setenv("REPRO_DEVICE_ENUM", off)
+        assert resolve_join_backend(idx, "device") == "host"
+        assert resolve_join_backend(idx, "auto") == "host"
+    # force flips auto onto the device only past the density threshold
+    monkeypatch.setenv("REPRO_DEVICE_ENUM", "force")
+    from repro.core.enumerate import DEVICE_AUTO_MIN_EDGES
+    want = ("device" if idx.num_index_edges >= DEVICE_AUTO_MIN_EDGES
+            else "host")
+    assert resolve_join_backend(idx, "auto") == want
+    monkeypatch.delenv("REPRO_DEVICE_ENUM")
+    # the dense-tile ceiling sends even explicit device requests home
+    monkeypatch.setattr(est, "DEVICE_DP_MAX_N", idx.n - 1)
+    assert resolve_join_backend(idx, "device") == "host"
+
+
+def test_plan_is_backend_independent():
+    """plan_query(backend=...) must return the identical plan either way
+    — the knob moves the DP derivation, never the decision."""
+    for seed in range(6):
+        _g, idx = _random_case(100 + seed)
+        ph = plan_query(idx, tau=-1.0)
+        pd = plan_query(idx, tau=-1.0, backend="device")
+        assert (ph.method, ph.cut) == (pd.method, pd.cut), seed
+        assert ph.dp is not None and pd.dp is not None
+        assert ph.dp.q_total == pd.dp.q_total
+        assert pd.dp.backend_used in ("device", "host")
+        dp2 = hop_count_dp(idx, "device")
+        assert np.array_equal(dp2.c_from, ph.dp.c_from)
+
+
+def test_batch_join_mode_parity_across_backends():
+    """End-to-end: BatchPathEnum(mode="join") on the device backend plans
+    through the semiring DP and must reproduce the host engine's results
+    and stats exactly."""
+    g = erdos_renyi(26, 3.5, seed=11)
+    queries = [(0, 7, 4), (1, 9, 4), (2, 11, 3)]
+    host = BatchPathEnum().run(g, queries, count_only=False, mode="join")
+    dev = BatchPathEnum(backend="device").run(g, queries, count_only=False,
+                                              mode="join")
+    for hi, di in zip(host.items, dev.items):
+        assert hi.plan.cut == di.plan.cut
+        assert hi.result.as_tuples() == di.result.as_tuples()
+        assert hi.result.stats == di.result.stats

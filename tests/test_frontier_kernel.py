@@ -211,6 +211,35 @@ def test_resolve_backend_fallback_matrix():
         resolve_backend(idx, "devcie", _FakeConstraint())
 
 
+def test_resolve_device_enum_env_matrix(monkeypatch):
+    """The §9 escape-hatch row: REPRO_DEVICE_ENUM=off (or 0) is a uniform
+    kill switch over every backend value — same spelling contract as
+    REPRO_SHARING=off|0 / REPRO_PALLAS=off — while unrecognized values
+    change nothing (only the documented force/off/0 spellings act)."""
+    g = erdos_renyi(30, 3.0, seed=7)
+    idx = build_index(g, 0, 5, 4)
+    for off in ("off", "0", "OFF", "Off"):
+        monkeypatch.setenv("REPRO_DEVICE_ENUM", off)
+        for req in (None, "host", "device", "auto"):
+            assert resolve_backend(idx, req) == "host", (off, req)
+        # the kill switch silences even the CI force spelling wherever
+        # both appear (off is the operator override, force the CI one)
+        with pytest.raises(ValueError):
+            resolve_backend(idx, "gpu")   # validation still runs first
+    monkeypatch.setenv("REPRO_DEVICE_ENUM", "banana")  # unrecognized
+    assert resolve_backend(idx, "device") == "device"
+    monkeypatch.delenv("REPRO_DEVICE_ENUM")
+    assert resolve_backend(idx, "device") == "device"
+    # end-to-end: an explicit device request with the kill switch set
+    # must produce the host path's results through the host expander
+    monkeypatch.setenv("REPRO_DEVICE_ENUM", "off")
+    res_off = enumerate_paths_idx(idx, backend="device")
+    monkeypatch.delenv("REPRO_DEVICE_ENUM")
+    res_host = enumerate_paths_idx(idx)
+    assert res_off.as_tuples() == res_host.as_tuples()
+    assert res_off.stats == res_host.stats
+
+
 def test_auto_rule_forces_device_only_when_dense(monkeypatch):
     """REPRO_DEVICE_ENUM=force flips auto onto the device on CPU — but
     only for indexes dense enough to clear the threshold."""

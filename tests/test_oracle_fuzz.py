@@ -98,6 +98,37 @@ def test_engines_match_oracle_sweep(seed):
     _check_engines_match_oracle(seed)
 
 
+def _check_fused_batch_matches_oracle(seed):
+    """Multi-query fused-launch leg of the device slice (DESIGN.md §9):
+    several queries on one random digraph through the batch engine's
+    fused device path, each path set against the oracle."""
+    rng = np.random.default_rng(seed + 9_000)
+    n = int(rng.integers(8, 27))
+    m = max(2, int(n * float(rng.choice([1.0, 2.0, 3.5]))))
+    g = from_edges(n, rng.integers(0, n, size=(m, 2)))
+    queries = []
+    while len(queries) < 3:
+        s, t = map(int, rng.choice(n, 2, replace=False))
+        queries.append((s, t, int(rng.integers(2, 6))))
+    out = BatchPathEnum(backend="device", fused="auto").run(
+        g, queries, count_only=False, mode="dfs")
+    for (s, t, k), item in zip(queries, out.items):
+        want = oracle.paths_as_set(oracle.enumerate_paths(g, s, t, k))
+        got = oracle.paths_as_set(item.result.as_tuples())
+        assert got == want, f"fused seed={seed} q=({s},{t},{k})"
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_batch_matches_oracle_smoke(seed):
+    _check_fused_batch_matches_oracle(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(6, 40))
+def test_fused_batch_matches_oracle_sweep(seed):
+    _check_fused_batch_matches_oracle(seed)
+
+
 # ---------------------------------------------------------------------------
 # batch semantics: dedup of repeated (s,t,k), warm-cache stability
 # ---------------------------------------------------------------------------

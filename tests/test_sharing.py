@@ -132,6 +132,29 @@ def test_parity_device_backend(monkeypatch, mode):
     assert out.shared_queries >= 2    # sharing really was on
 
 
+def test_member_view_chunks_through_fused_device_path(monkeypatch):
+    """§13 × §9 fused launches: group-built ``member_view`` indexes,
+    denied the shared walk, flow through the fused multi-query device
+    path and stay byte-identical to the solo host pipeline."""
+    monkeypatch.setenv("REPRO_DEVICE_ENUM", "force")
+    # keep Level-A group *builds* but disable the Level-B shared walk,
+    # so every member_view index reaches the batch's fused device phase
+    monkeypatch.setattr(sharing_mod, "run_shared_groups",
+                        lambda *a, **kw: ({}, {}, 0))
+    g = _graph(6)
+    queries = SHAPES["shared_s"]
+    fused = BatchPathEnum(sharing="auto", backend="device",
+                          fused="auto").run(g, queries, count_only=False)
+    assert fused.fused_queries >= 2      # the fused path really ran
+    assert fused.shared_queries == 0     # ...and the shared walk did not
+    assert any(i.fused for i in fused.items)
+    host = BatchPathEnum(sharing="off", backend="host",
+                         fused="off").run(g, queries, count_only=False)
+    for (s, t, k), a, b in zip(queries, fused.items, host.items):
+        _assert_result_equal(a.result, b.result,
+                             f"fused-member-view q=({s},{t},{k})")
+
+
 # ---------------------------------------------------------------------------
 # sharing observability + the escape hatch
 # ---------------------------------------------------------------------------
